@@ -1,0 +1,137 @@
+"""Analytic FLOP/byte models per (arch x shape) cell.
+
+Why analytic: XLA's HloCostAnalysis counts every while/scan body ONCE, and
+this framework is scan-over-layers with flash-attention scans inside the
+layer body -- raw ``cost_analysis`` under-counts by orders of magnitude.  The
+roofline therefore uses closed-form per-layer math (the same formulas MFU
+accounting uses everywhere), with the dry-run's compiled HLO supplying what
+analysis cannot: the collective schedule (op types, counts, bytes) and the
+per-device memory picture.  Raw HLO numbers are reported alongside for
+reference; collectives inside the layer loop are multiplied by the trip
+count (see launch/dryrun.py::collective_bytes).
+
+Conventions:
+  MODEL_FLOPS  = 6 * N_active * tokens (train), 2 * N_active * tokens
+                 (prefill), 2 * N_active * batch (decode per token)
+  attention    = 4 * B * S^2 * H * Dh per layer fwd (x0.5 causal),
+                 x3 for train (fwd + recompute-free bwd convention)
+  HLO_FLOPS    = MODEL_FLOPS * (1 + remat_overhead): the scanned train step
+                 rematerializes each layer once in the backward pass, so the
+                 compiled compute is ~(8/6) x MODEL_FLOPS for train.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeSet
+
+BF16 = 2
+F32 = 4
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+
+def _attn_layers(cfg: ArchConfig) -> int:
+    if cfg.family in ("dense", "vlm", "moe"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "encdec":
+        return cfg.n_enc_layers + 2 * cfg.n_layers   # self + cross
+    return 0
+
+
+def _head_dim(cfg: ArchConfig) -> int:
+    return cfg.head_dim() if cfg.n_heads else 0
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSet) -> Dict[str, float]:
+    """Global FLOPs for one step of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    n_act = cfg.active_param_count()
+    h, dh, la = cfg.n_heads, _head_dim(cfg), _attn_layers(cfg)
+    if shape.kind == "train":
+        tokens = b * s
+        matmul = 6.0 * n_act * tokens
+        attn = 3.0 * la * 4.0 * b * s * s * h * dh * 0.5
+    elif shape.kind == "prefill":
+        tokens = b * s
+        matmul = 2.0 * n_act * tokens
+        attn = la * 4.0 * b * s * s * h * dh * 0.5
+    else:  # decode: one token against an S-long cache
+        matmul = 2.0 * n_act * b
+        attn = la * 4.0 * b * s * h * dh
+    # SSD flops (chunked scan): ~ 2*S*(2*d_inner*N + chunk*d_inner) per layer
+    ssd = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        di, n = cfg.d_inner, cfg.ssm_state
+        toks = b * (s if shape.kind != "decode" else 1)
+        per_tok = 2 * di * n * 2 + 2 * di * cfg.ssm_chunk
+        mult = 3.0 if shape.kind == "train" else 1.0
+        ssd = mult * cfg.n_layers * toks * per_tok
+    total = matmul + attn + ssd
+    # the layer scan is rematerialized in training: one extra forward
+    hlo = total * (8.0 / 6.0) if shape.kind == "train" else total
+    return {"model_flops": total, "hlo_flops_est": hlo,
+            "matmul_flops": matmul, "attn_flops": attn}
+
+
+def kv_cache_bytes(cfg: ArchConfig, shape: ShapeSet) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    hk, dh = cfg.n_kv_heads, _head_dim(cfg)
+    if cfg.family in ("dense", "vlm"):
+        return 2.0 * cfg.n_layers * b * s * hk * dh * BF16
+    if cfg.family == "moe":
+        return 2.0 * cfg.n_layers * b * s * hk * dh * BF16
+    if cfg.family == "hybrid":
+        la = cfg.n_layers // cfg.attn_every
+        ssm = cfg.n_layers * b * cfg.ssm_heads * cfg.ssm_headdim \
+            * cfg.ssm_state * F32
+        return 2.0 * la * b * s * hk * dh * BF16 + ssm
+    if cfg.family == "ssm":
+        return cfg.n_layers * b * cfg.ssm_heads * cfg.ssm_headdim \
+            * cfg.ssm_state * F32
+    if cfg.family == "encdec":
+        return 4.0 * cfg.n_layers * b * s * hk * dh * BF16   # self + cross
+    return 0.0
+
+
+def hbm_bytes(cfg: ArchConfig, shape: ShapeSet) -> float:
+    """Global HBM traffic for one step (the memory-roofline numerator)."""
+    n = cfg.param_count()
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "train":
+        weights = n * BF16 * 3           # read fwd + read bwd(remat) + write
+        opt = n * F32 * 2 * 2            # m, v read+write
+        grads = n * F32 * 2
+        acts = 12.0 * cfg.n_layers * b * s * d * BF16
+        return weights + opt + grads + acts
+    if shape.kind == "prefill":
+        return n * BF16 + 10.0 * cfg.n_layers * b * s * d * BF16 \
+            + kv_cache_bytes(cfg, shape)
+    # decode: weights (active experts only for MoE) + full KV cache read
+    active_w = cfg.active_param_count() * BF16
+    return active_w + kv_cache_bytes(cfg, shape) \
+        + 10.0 * cfg.n_layers * b * d * BF16
+
+
+def roofline_terms(cfg: ArchConfig, shape: ShapeSet, chips: int,
+                   collective_bytes_per_dev: float) -> Dict[str, float]:
+    f = model_flops(cfg, shape)
+    compute_s = f["hlo_flops_est"] / (chips * PEAK_FLOPS)
+    memory_s = hbm_bytes(cfg, shape) / (chips * HBM_BW)
+    collective_s = collective_bytes_per_dev / LINK_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])
+    total = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant[0],
+        "bound_s": total,
+        "roofline_frac": compute_s / total if total > 0 else 0.0,
+        **f,
+    }

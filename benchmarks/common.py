@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: cached simulator runs + CSV reporting.
+
+Output convention (required by run.py): one CSV row per measurement,
+``name,us_per_call,derived`` where us_per_call is the wall-clock of the
+simulator invocation and ``derived`` carries the paper-comparable figure
+(normalized throughput / traffic / rate...).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Tuple
+
+from repro.core import SimConfig, make_trace, simulate
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+# paper benchmark order (Fig. 4)
+BENCHES = ["fmm", "barnes", "cholesky", "volrend", "ocean_c", "ocean_nc",
+           "fft", "radix", "lu_c", "lu_nc", "water_nsq", "water_sp"]
+SUBSET = ["fmm", "cholesky", "volrend", "fft", "lu_c", "water_nsq"]
+
+N_CORES = 16 if QUICK else 64
+SCALE = 0.2 if QUICK else 0.25     # trace length multiplier (1 CPU budget)
+MAX_STEPS = 4_000_000
+
+_cache: Dict[Tuple, Tuple] = {}
+
+
+def run(bench: str, proto: str, n_cores: int = None, scale: float = None,
+        **cfg_kw):
+    """Memoized simulate() -> (SimResult, wall_seconds)."""
+    n_cores = n_cores or N_CORES
+    scale = scale if scale is not None else SCALE
+    key = (bench, proto, n_cores, scale, tuple(sorted(cfg_kw.items())))
+    if key not in _cache:
+        tr = make_trace(bench, n_cores, scale=scale)
+        cfg = SimConfig(max_steps=MAX_STEPS, **cfg_kw)
+        t0 = time.time()
+        res = simulate(tr, proto, cfg)
+        _cache[key] = (res, time.time() - t0)
+    return _cache[key]
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def header(title: str):
+    print(f"# --- {title} ---", flush=True)

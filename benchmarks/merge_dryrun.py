@@ -1,0 +1,25 @@
+"""Merge the final optimized single-pod dry-run into dryrun.json.
+
+The multi-pod records (compile proof for the 512-chip mesh) are kept from
+the full two-mesh run; single-pod records are replaced by the re-run with
+the optimized sharding (EXPERIMENTS.md §Perf) and the loop-aware collective
+parser, which is what §Roofline reads.
+"""
+import json
+import sys
+
+
+def main(two_mesh="dryrun.json", single="dryrun_final_single.json",
+         out="dryrun.json"):
+    base = json.load(open(two_mesh))
+    final_single = json.load(open(single))
+    multi = [r for r in base if "multi" in r["mesh"]]
+    merged = final_single + multi
+    json.dump(merged, open(out, "w"), indent=1)
+    ok = sum(r["status"] == "ok" for r in merged)
+    sk = sum(r["status"] == "skipped" for r in merged)
+    print(f"merged {len(merged)} cells -> {out} ({ok} ok, {sk} skipped)")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

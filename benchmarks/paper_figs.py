@@ -1,0 +1,227 @@
+"""One function per paper table/figure (Tardis, ICPP'15).
+
+Each prints CSV rows ``name,us_per_call,derived`` and returns a dict of the
+headline numbers so EXPERIMENTS.md and tests can assert the paper's claims.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.timestamps import storage_bits_per_line
+
+from .common import BENCHES, N_CORES, QUICK, SUBSET, header, row, run
+
+
+def fig4_throughput() -> Dict:
+    """Fig. 4: 64-core throughput + network traffic vs. baseline MSI.
+
+    Paper claims: Tardis within ~0.5% of MSI; ~+19% traffic; spec-off -7%."""
+    header(f"fig4: throughput/traffic @ {N_CORES} cores (norm. to MSI)")
+    rel_thr, rel_thr_nospec, rel_traf, ack_thr = [], [], [], []
+    for b in BENCHES:
+        msi, t_msi = run(b, "directory")
+        ack, t_ack = run(b, "directory", ackwise_k=4)
+        trd, t_trd = run(b, "tardis")
+        trd_ns, t_ns = run(b, "tardis", speculate=False)
+        thr = msi.cycles / max(1, trd.cycles)
+        thr_ns = msi.cycles / max(1, trd_ns.cycles)
+        traf = trd.stats["traffic"] / max(1, msi.stats["traffic"])
+        rel_thr.append(thr)
+        rel_thr_nospec.append(thr_ns)
+        rel_traf.append(traf)
+        ack_thr.append(msi.cycles / max(1, ack.cycles))
+        row(f"fig4.{b}", t_trd * 1e6,
+            f"tardis_thr={thr:.3f};nospec_thr={thr_ns:.3f};"
+            f"ackwise_thr={ack_thr[-1]:.3f};traffic={traf:.3f}")
+    out = {"tardis_vs_msi": float(np.mean(rel_thr)),
+           "nospec_vs_msi": float(np.mean(rel_thr_nospec)),
+           "ackwise_vs_msi": float(np.mean(ack_thr)),
+           "traffic_vs_msi": float(np.mean(rel_traf))}
+    row("fig4.AVG", 0.0,
+        f"tardis_thr={out['tardis_vs_msi']:.3f};"
+        f"nospec_thr={out['nospec_vs_msi']:.3f};"
+        f"traffic={out['traffic_vs_msi']:.3f}")
+    return out
+
+
+def fig5_renew() -> Dict:
+    """Fig. 5: renew + misspeculation rates (out of LLC accesses)."""
+    header("fig5: renew / misspeculation rates")
+    renew_rates, misspec_rates = [], []
+    for b in BENCHES:
+        res, t = run(b, "tardis")
+        llc = max(1, res.stats["n_llc_req"])
+        rr = res.stats["n_renew"] / llc
+        mr = res.stats["n_misspec"] / llc
+        renew_rates.append(rr)
+        misspec_rates.append(mr)
+        row(f"fig5.{b}", t * 1e6, f"renew_rate={rr:.4f};misspec={mr:.5f}")
+    out = {"avg_renew": float(np.mean(renew_rates)),
+           "avg_misspec": float(np.mean(misspec_rates)),
+           "max_renew": float(np.max(renew_rates))}
+    row("fig5.AVG", 0.0, f"renew={out['avg_renew']:.4f};"
+        f"misspec={out['avg_misspec']:.5f}")
+    return out
+
+
+def table6_ts() -> Dict:
+    """Table VI: timestamp increment rate + self-increment share."""
+    header("table6: timestamp statistics")
+    rates, shares = [], []
+    for b in BENCHES:
+        res, t = run(b, "tardis")
+        incr = max(1.0, res.stats["n_ts_incr"])
+        rate = res.cycles * res.pts.shape[0] / incr   # core-cycles per +1
+        share = res.stats["n_selfinc"] / incr
+        rates.append(rate)
+        shares.append(share)
+        row(f"table6.{b}", t * 1e6,
+            f"cycles_per_ts={rate:.0f};selfinc_share={share:.3f}")
+    out = {"avg_cycles_per_ts": float(np.mean(rates)),
+           "avg_selfinc_share": float(np.mean(shares))}
+    row("table6.AVG", 0.0, f"cycles_per_ts={out['avg_cycles_per_ts']:.0f};"
+        f"selfinc_share={out['avg_selfinc_share']:.3f}")
+    return out
+
+
+def fig6_ooo() -> Dict:
+    """Fig. 6: out-of-order cores -- speculation matters much less."""
+    header("fig6: OoO cores (hide window = 40 cycles)")
+    d_on, d_off = [], []
+    for b in SUBSET[:4]:
+        msi, _ = run(b, "directory", ooo_hide=40)
+        on, t = run(b, "tardis", ooo_hide=40)
+        off, _ = run(b, "tardis", ooo_hide=40, speculate=False)
+        d_on.append(msi.cycles / max(1, on.cycles))
+        d_off.append(msi.cycles / max(1, off.cycles))
+        row(f"fig6.{b}", t * 1e6,
+            f"spec_thr={d_on[-1]:.3f};nospec_thr={d_off[-1]:.3f}")
+    out = {"ooo_spec": float(np.mean(d_on)), "ooo_nospec": float(np.mean(d_off))}
+    row("fig6.AVG", 0.0, f"spec={out['ooo_spec']:.3f};"
+        f"nospec={out['ooo_nospec']:.3f}")
+    return out
+
+
+def fig7_selfinc() -> Dict:
+    """Fig. 7: self-increment period sweep (spin-heavy workloads degrade
+    at large periods; larger periods always reduce traffic)."""
+    header("fig7: self-increment period sweep")
+    out = {}
+    periods = [10, 100, 1000]
+    for b in (["fmm", "cholesky", "fft", "volrend"] if not QUICK
+              else ["cholesky", "fft"]):
+        msi, _ = run(b, "directory")
+        perf, traf = [], []
+        for p in periods:
+            res, t = run(b, "tardis", selfinc_period=p)
+            perf.append(msi.cycles / max(1, res.cycles))
+            traf.append(res.stats["traffic"] / max(1, msi.stats["traffic"]))
+        out[b] = dict(zip(periods, perf))
+        row(f"fig7.{b}", t * 1e6,
+            ";".join(f"p{p}_thr={x:.3f}" for p, x in zip(periods, perf))
+            + ";" + ";".join(f"p{p}_traf={x:.3f}"
+                             for p, x in zip(periods, traf)))
+    return out
+
+
+def fig8_scale() -> Dict:
+    """Fig. 8: 16 and 256 cores (256-core spin workloads need period=10)."""
+    header("fig8: scalability 16 / 256 cores")
+    out = {}
+    for n, scale in ((16, 0.5), (256, 0.08 if not QUICK else 0.05)):
+        rel, rel_p10 = [], []
+        benches = SUBSET[:3] if n == 256 else BENCHES
+        for b in benches:
+            msi, _ = run(b, "directory", n_cores=n, scale=scale)
+            trd, t = run(b, "tardis", n_cores=n, scale=scale)
+            p10, _ = run(b, "tardis", n_cores=n, scale=scale,
+                         selfinc_period=10)
+            rel.append(msi.cycles / max(1, trd.cycles))
+            rel_p10.append(msi.cycles / max(1, p10.cycles))
+            row(f"fig8.{n}c.{b}", t * 1e6,
+                f"p100_thr={rel[-1]:.3f};p10_thr={rel_p10[-1]:.3f}")
+        out[n] = {"p100": float(np.mean(rel)), "p10": float(np.mean(rel_p10))}
+        row(f"fig8.{n}c.AVG", 0.0,
+            f"p100={out[n]['p100']:.3f};p10={out[n]['p10']:.3f}")
+    return out
+
+
+def table7_storage() -> Dict:
+    """Table VII: per-LLC-line coherence storage (bits)."""
+    header("table7: storage overhead (bits / LLC line)")
+    out = {}
+    for n in (16, 64, 256):
+        bits = {s: storage_bits_per_line(
+            n, s, ackwise_ptrs=(8 if n == 256 else 4))
+            for s in ("full-map", "ackwise", "tardis")}
+        out[n] = bits
+        row(f"table7.{n}cores", 0.0,
+            f"full_map={bits['full-map']};ackwise={bits['ackwise']};"
+            f"tardis={bits['tardis']}")
+    return out
+
+
+def fig9_tssize() -> Dict:
+    """Fig. 9: delta-timestamp width sweep (rebase overhead)."""
+    header("fig9: timestamp size sweep")
+    out = {}
+    benches = ["volrend", "cholesky", "water_nsq"] if not QUICK else ["volrend"]
+    for b in benches:
+        msi, _ = run(b, "directory")
+        perf = {}
+        for bits in (8, 14, 20, 0):       # 0 = uncompressed 64-bit
+            res, t = run(b, "tardis", ts_bits=bits)
+            name = f"{bits}b" if bits else "64b"
+            perf[name] = msi.cycles / max(1, res.cycles)
+        out[b] = perf
+        row(f"fig9.{b}", t * 1e6,
+            ";".join(f"{k}_thr={v:.3f}" for k, v in perf.items()))
+    return out
+
+
+def fig10_lease() -> Dict:
+    """Fig. 10: lease sweep (insensitive except spin-heavy; traffic falls
+    as the lease grows)."""
+    header("fig10: lease sweep")
+    out = {}
+    benches = ["volrend", "cholesky", "fft", "barnes"] if not QUICK \
+        else ["cholesky", "fft"]
+    for b in benches:
+        msi, _ = run(b, "directory")
+        perf, traf = {}, {}
+        for lease in (5, 10, 20, 50):
+            res, t = run(b, "tardis", lease=lease)
+            perf[lease] = msi.cycles / max(1, res.cycles)
+            traf[lease] = res.stats["traffic"] / max(1, msi.stats["traffic"])
+        out[b] = perf
+        row(f"fig10.{b}", t * 1e6,
+            ";".join(f"l{k}_thr={v:.3f}" for k, v in perf.items()) + ";"
+            + ";".join(f"l{k}_traf={v:.3f}" for k, v in traf.items()))
+    return out
+
+
+def ext_estate() -> Dict:
+    """Beyond-paper: section IV-D's E-state extension, which the paper
+    defers to future work.  Private/read-once lines are granted exclusively
+    and never renew -- this attacks the renewal traffic the paper names as
+    Tardis's main overhead (WATER-SP's 3x outlier in particular)."""
+    header("ext: E-state (paper IV-D, evaluated here)")
+    out = {}
+    for b in ["water_sp", "lu_c", "fft", "barnes"]:
+        base, _ = run(b, "tardis")
+        est, t = run(b, "tardis", estate=True)
+        dr = (base.stats["n_renew"] - est.stats["n_renew"]) / max(
+            1, base.stats["n_renew"])
+        dt = est.stats["traffic"] / max(1, base.stats["traffic"])
+        out[b] = {"renew_cut": dr, "traffic": dt}
+        row(f"ext_estate.{b}", t * 1e6,
+            f"renew_cut={dr:.3f};traffic_vs_base={dt:.3f};"
+            f"egrants={est.stats['n_egrant']:.0f};"
+            f"thr_vs_base={base.cycles/max(1, est.cycles):.3f}")
+    return out
+
+
+ALL = [fig4_throughput, fig5_renew, table6_ts, fig6_ooo, fig7_selfinc,
+       fig8_scale, table7_storage, fig9_tssize, fig10_lease, ext_estate]

@@ -1,0 +1,126 @@
+"""Render EXPERIMENTS.md tables from artifacts (dryrun/roofline/bench CSV).
+
+Usage: PYTHONPATH=src:. python -m benchmarks.report_experiments
+Replaces the <!-- *_TABLE --> markers in EXPERIMENTS.md in place.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+
+def dryrun_table(path="dryrun.json") -> str:
+    rs = json.load(open(path))
+    ok = [r for r in rs if r["status"] == "ok"]
+    lines = ["| mesh | arch | shape | compile s | HLO flops/dev (raw) | "
+             "temp GB/dev | args GB/dev | collectives AG/AR/RS/A2A/CP |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(ok, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+        ca = r.get("cost_analysis", {})
+        ma = r.get("memory_analysis", {})
+        cc = r.get("collective_counts", {})
+        cols = "/".join(str(cc.get(k, 0)) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        mesh = "multi" if "multi" in r["mesh"] else "single"
+        lines.append(
+            f"| {mesh} | {r['arch']} | {r['shape']} | {r.get('compile_s','')}"
+            f" | {ca.get('flops', 0):.2e} |"
+            f" {ma.get('temp_size_in_bytes', 0)/1e9:.1f} |"
+            f" {r.get('arg_bytes_per_device', 0)/1e9:.2f} | {cols} |")
+    sk = sorted({r["arch"] + "/" + r["shape"] for r in rs
+                 if r["status"] == "skipped"})
+    lines.append("")
+    lines.append(f"Skipped by rule ({len(sk)} arch/shape pairs x 2 meshes): "
+                 + ", ".join(sk))
+    return "\n".join(lines)
+
+
+def roofline_tables(path="roofline.json"):
+    rows = json.load(open(path))
+    single = [r for r in rows if "single" in r["mesh"]]
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | roofline frac | MODEL/HLO | what moves it |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    doms = {}
+    for r in sorted(single, key=lambda x: (x["arch"], x["shape"])):
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['roofline_frac']:.3f} | "
+            f"{r['model_vs_hlo']:.2f} | {r['note'].split(':')[0]} |")
+    summary = (f"Across {len(single)} single-pod cells: "
+               + ", ".join(f"{v} {k}-bound" for k, v in sorted(doms.items()))
+               + ". Training/prefill cells of the dense/MoE archs sit at "
+               "the compute roof (fraction 1.0 = the step is FLOP-limited "
+               "even with every collective exposed); decode cells are "
+               "collective/memory-bound as expected at batch<=128 per 256 "
+               "chips; the SSM/hybrid family's terms are dominated by "
+               "whatever the residual-stream sharding makes of the "
+               "projections -- see §Perf.")
+    return "\n".join(lines), summary
+
+
+def claims_table(bench_path="bench_output.txt") -> str:
+    if not os.path.exists(bench_path):
+        return "(populate by running `python -m benchmarks.run | tee "\
+               "bench_output.txt`)"
+    txt = open(bench_path).read()
+    rows = {}
+    for line in txt.splitlines():
+        if line.startswith("#") or "," not in line:
+            continue
+        name, _, derived = line.split(",", 2)
+        rows[name] = derived
+    avg = rows.get("fig4.AVG", "")
+    f5 = rows.get("fig5.AVG", "")
+    t6 = rows.get("table6.AVG", "")
+    f6 = rows.get("fig6.AVG", "")
+    f8a = rows.get("fig8.16c.AVG", "")
+    f8b = rows.get("fig8.256c.AVG", "")
+    t7 = rows.get("table7.256cores", "")
+    lines = [
+        "| paper claim | paper value | reproduced (this run) |",
+        "|---|---|---|",
+        f"| Fig.4 Tardis ≈ MSI throughput (64c) | 1.00 ±0.005 | {avg} |",
+        "| Fig.4 speculation off | 0.93 | (nospec_thr above) |",
+        "| Fig.4 traffic overhead | 1.19–1.21 | (traffic above) |",
+        f"| Fig.5 misspeculation < 1% | <0.01 | {f5} |",
+        f"| Table VI ts rate / self-inc share | 263 cyc, 26.6% | {t6} |",
+        f"| Fig.6 OoO: spec matters less | ≈MSI both | {f6} |",
+        f"| Fig.8 16 cores | ≈MSI | {f8a} |",
+        f"| Fig.8 256 cores, period 10 vs 100 | p10 ≈ MSI | {f8b} |",
+        f"| Table VII storage @256c | 256/64/40 bits | {t7} |",
+    ]
+    for b in ("volrend", "cholesky", "fft"):
+        if f"fig7.{b}" in rows:
+            lines.append(f"| Fig.7 period sweep ({b}) | spin-sensitive | "
+                         f"{rows[f'fig7.{b}']} |")
+    for b in ("volrend", "cholesky"):
+        if f"fig9.{b}" in rows:
+            lines.append(f"| Fig.9 ts width ({b}) | 20b ≈ 64b | "
+                         f"{rows[f'fig9.{b}']} |")
+    for b in ("cholesky", "fft"):
+        if f"fig10.{b}" in rows:
+            lines.append(f"| Fig.10 lease sweep ({b}) | flat-ish | "
+                         f"{rows[f'fig10.{b}']} |")
+    return "\n".join(lines)
+
+
+def main():
+    exp = open("EXPERIMENTS.md").read()
+    exp = exp.replace("<!-- DRYRUN_TABLE -->", dryrun_table())
+    if os.path.exists("roofline.json"):
+        table, summary = roofline_tables()
+        exp = exp.replace("<!-- ROOFLINE_TABLE -->", table)
+        exp = exp.replace("<!-- ROOFLINE_SUMMARY -->", summary)
+    exp = exp.replace("<!-- CLAIMS_TABLE -->", claims_table())
+    open("EXPERIMENTS.md", "w").write(exp)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Roofline report: three terms per (arch x shape x mesh) from the dry-run.
+
+Reads the dryrun.json artifact (launch/dryrun.py), combines the compiled
+HLO's collective schedule with the analytic FLOP/byte models
+(benchmarks/analytic.py -- see its docstring for why analytic), and emits
+one row per cell:
+
+  compute_s   = HLO_FLOPs / (chips * 197 TFLOP/s)
+  memory_s    = HLO_bytes / (chips * 819 GB/s)
+  collective_s= collective_bytes / (chips * 50 GB/s)
+
+plus the dominant term, MODEL_FLOPS / HLO_FLOPs, and a what-would-move-it
+note.  The full table lands in EXPERIMENTS.md section Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPE_BY_NAME, get_arch
+
+from .analytic import LINK_BW, roofline_terms
+from .common import header, row
+
+MOVE_NOTE = {
+    "compute": "compute-bound: only lower-precision math or fewer remat "
+               "passes move it",
+    "memory": "HBM-bound: raise arithmetic intensity (bigger per-chip batch,"
+              " fused kernels, avoid cache re-reads)",
+    "collective": "ICI-bound: reshard to cut the big collectives "
+                  "(FSDP prefetch, TP->data swaps, overlap)",
+}
+
+
+def _scan_multiplier(arch: str) -> int:
+    cfg = get_arch(arch)
+    if cfg.family == "hybrid":
+        return cfg.attn_every               # per-group scan length
+    if cfg.family == "encdec":
+        return cfg.n_layers
+    if cfg.family == "moe":
+        return cfg.n_layers - cfg.first_dense_layers
+    return cfg.n_layers
+
+
+def cell_report(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_arch(rec["arch"])
+    shape = SHAPE_BY_NAME[rec["shape"]]
+    chips = 512 if "multi" in rec["mesh"] else 256
+    coll = rec.get("collective_bytes", {}) or {}
+    in_loop = rec.get("collective_bytes_in_loop", {}) or {}
+    if "error" in coll:
+        coll, in_loop = {}, {}
+    mult = _scan_multiplier(rec["arch"])
+    # per-device bytes: out-of-loop once + in-loop x scan length
+    total_coll = sum(v for k, v in coll.items()) if coll else 0
+    loop_coll = sum(v for k, v in in_loop.items()) if in_loop else 0
+    corrected = (total_coll - loop_coll) + mult * loop_coll
+    terms = roofline_terms(cfg, shape, chips, corrected)
+    raw_flops = rec.get("cost_analysis", {}).get("flops", 0.0)
+    mem = rec.get("memory_analysis", {})
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "collective_bytes_per_dev": corrected,
+        "collective_counts": rec.get("collective_counts", {}),
+        "hlo_flops_raw_per_dev": raw_flops,
+        "temp_bytes_per_dev": mem.get("temp_size_in_bytes", 0),
+        "arg_bytes_per_dev": rec.get("arg_bytes_per_device", 0),
+        "model_vs_hlo": terms["model_flops"] / max(
+            1.0, terms["hlo_flops_est"]),
+        "note": MOVE_NOTE[terms["dominant"]],
+        **terms,
+    }
+    return out
+
+
+def report(dryrun_path: str = "dryrun.json",
+           out_path: str = "roofline.json") -> List[Dict]:
+    recs = json.load(open(dryrun_path))
+    header(f"roofline: {len(recs)} dry-run cells from {dryrun_path}")
+    rows = []
+    for rec in recs:
+        r = cell_report(rec)
+        if r is None:
+            continue
+        rows.append(r)
+        row(f"roofline.{r['mesh']}.{r['arch']}.{r['shape']}",
+            0.0,
+            f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+            f"collective_s={r['collective_s']:.4f};dom={r['dominant']};"
+            f"frac={r['roofline_frac']:.3f};"
+            f"model_vs_hlo={r['model_vs_hlo']:.3f}")
+    if out_path:
+        json.dump(rows, open(out_path, "w"), indent=1)
+    return rows
+
+
+def markdown_table(rows: List[Dict], mesh_filter: str = "single") -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | roofline frac | MODEL/HLO |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if mesh_filter not in r["mesh"]:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['roofline_frac']:.3f} | "
+            f"{r['model_vs_hlo']:.3f} |")
+    return "\n".join(lines)

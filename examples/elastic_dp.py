@@ -1,0 +1,52 @@
+"""Elastic data-parallel training with Tardis-leased parameters.
+
+A learner publishes parameter versions into a TardisStore while the worker
+pool grows and shrinks every few steps.  Workers read *leased* parameter
+copies (bounded logical staleness -- the paper's deferred update propagation
+put to work), renew on expiry (data-less when the learner hasn't published),
+and need zero protocol action to leave.
+
+Run:  PYTHONPATH=src python examples/elastic_dp.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import init_params, loss_fn
+from repro.runtime import ElasticTrainer
+
+
+def main():
+    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=2, d_model=128,
+                  vocab=512)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+    def grad_fn(p, b):
+        return jax.value_and_grad(lambda pp: loss_fn(cfg, pp, b))(p)
+
+    def make_batch(step, worker):
+        rng = np.random.default_rng(step * 1000 + worker)
+        t = rng.integers(0, cfg.vocab, (4, 64)).astype(np.int32)
+        return {"tokens": jnp.asarray(t), "labels": jnp.asarray(t)}
+
+    # worker pool: 2 -> 4 -> 1 -> 3 (simulated preemptions / scale-ups)
+    schedule = [2, 2, 3, 4, 4, 1, 1, 2, 3, 3, 3, 2, 2, 2, 2, 2]
+    et = ElasticTrainer(params, grad_fn, make_batch, lease=2, lr=3e-3)
+    rep = et.run(len(schedule), schedule=lambda s: schedule[s])
+
+    print(f"steps: {rep.steps}, worker joins: {rep.joins}, "
+          f"leaves: {rep.leaves}")
+    print(f"loss: {rep.losses[0]:.3f} -> {np.mean(rep.losses[-4:]):.3f}")
+    print(f"parameter renewals: {rep.renewals} "
+          f"({rep.data_less} data-less)")
+    print(f"max logical staleness observed: {rep.max_staleness} "
+          f"(lease bound: workers can never be further behind than "
+          f"lease+publish jump)")
+    print("no sharer lists, no invalidation broadcasts, no barrier on "
+          "scale-down: O(log N) metadata per object (the paper's claim, "
+          "applied to the training control plane)")
+
+
+if __name__ == "__main__":
+    main()

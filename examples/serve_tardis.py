@@ -1,0 +1,76 @@
+"""End-to-end serving driver: batched requests against a replica cluster
+whose weights and KV metadata are Tardis-coherent.
+
+Serves a tinyllama-family model on N replicas with continuous waves of
+batched requests, hot-swaps the weights mid-stream (no invalidation
+broadcast), and prints the coherence ledger: renewals, data-less renewal
+savings, and what a full-map directory would have done on the same stream.
+
+Run:  PYTHONPATH=src python examples/serve_tardis.py [--replicas 3]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.models import init_params
+from repro.runtime import Request, ServingCluster
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=args.layers,
+                  d_model=args.d_model, d_ff=args.d_model * 4, vocab=512)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key, jnp.float32)
+    print(f"model: {cfg.name}-reduced {args.layers}L d={args.d_model} "
+          f"({sum(p.size for p in jax.tree.leaves(params))/1e6:.1f}M params)")
+
+    cluster = ServingCluster(cfg, lambda: params,
+                             n_replicas=args.replicas, lease=8,
+                             cache_len=96, selfinc_period=4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(1, cfg.vocab, rng.integers(4, 24))
+                    .astype(np.int32), max_new=args.max_new)
+            for i in range(args.requests)]
+
+    t0 = time.time()
+    half = len(reqs) // 2
+    done1, _ = cluster.run(reqs[:half])
+    # live weight hot-swap between waves: Tardis jumps ahead, nobody blocks
+    new_params = jax.tree.map(lambda p: p * 0.999, params)
+    wts = cluster.publish_weights(new_params)
+    print(f"published new weight version at logical time {wts} "
+          "(zero invalidation messages)")
+    done2, report = cluster.run(reqs[half:])
+    dt = time.time() - t0
+
+    n_tok = sum(len(r.output) for r in reqs)
+    print(f"\nserved {len(reqs)} requests / {n_tok} tokens "
+          f"on {args.replicas} replicas in {dt:.1f}s "
+          f"({n_tok/dt:.1f} tok/s on CPU)")
+    print("\ncoherence ledger (Tardis):")
+    for k, v in report.items():
+        print(f"  {k:28s} {v}")
+    saved = report["bytes_saved_by_renewals"]
+    print(f"\n=> data-less renewals avoided re-sending "
+          f"{saved/1e6:.1f} MB of weights;")
+    print(f"=> a full-map directory would have tracked "
+          f"{report['directory_peak_sharers']} sharers and sent "
+          f"{report['directory_would_invalidate']} invalidations.")
+    sample = reqs[0]
+    print(f"\nsample completion (req 0): {sample.output.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

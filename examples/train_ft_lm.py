@@ -1,0 +1,74 @@
+"""End-to-end training driver: a ~100M-param tinyllama-family LM trained for
+a few hundred steps with the full production loop -- sharded checkpoints,
+an injected node failure + restart, straggler accounting, int8 gradient
+compression with error feedback, and microbatch accumulation.
+
+Default size is CPU-friendly; ``--full`` trains the ~100M configuration for
+200 steps (expect ~20-40 min on CPU).
+
+Run:  PYTHONPATH=src python examples/train_ft_lm.py [--full]
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced
+from repro.models import init_params
+from repro.runtime import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params, 200 steps")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=8, d_model=768,
+                      n_heads=12, n_kv_heads=4, d_ff=2048, d_head=64,
+                      vocab=32000)
+        steps = args.steps or 200
+        batch, seq = 8, 256
+    else:
+        cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=4, d_model=256,
+                      n_heads=8, n_kv_heads=4, d_ff=512, d_head=32,
+                      vocab=2048)
+        steps = args.steps or 60
+        batch, seq = 8, 128
+
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"training {n_params/1e6:.1f}M params for {steps} steps "
+          f"(batch={batch}, seq={seq})")
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="tardis_ckpt_")
+    tc = TrainConfig(
+        steps=steps, ckpt_dir=ckpt_dir, ckpt_every=max(10, steps // 8),
+        batch=batch, seq=seq, grad_compression=True, n_micro=2,
+        fail_at_step=steps // 2,         # inject a crash mid-run
+        log_every=10)
+
+    stragglers = []
+    t0 = time.time()
+    out = train(cfg, params, tc,
+                on_straggler=lambda s, dt: stragglers.append((s, dt)),
+                on_metrics=lambda s, m: print(
+                    f"  step {s:4d} loss {m['loss']:.4f} "
+                    f"gnorm {m['grad_norm']:.2f} {m['step_s']*1e3:.0f} ms"))
+    dt = time.time() - t0
+
+    print(f"\ndone in {dt/60:.1f} min: loss {out['losses'][0]:.3f} -> "
+          f"{out['losses'][-1]:.3f}")
+    print(f"recovered from {out['restarts']} injected failure(s) via "
+          f"checkpoint restore; {out['stragglers']} straggler steps flagged")
+    print(f"checkpoints in {ckpt_dir}")
+    assert out["losses"][-1] < out["losses"][0], "did not learn!"
+
+
+if __name__ == "__main__":
+    main()

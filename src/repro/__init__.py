@@ -1,0 +1,8 @@
+"""Tardis-JAX: timestamp-coherent distributed training/serving framework.
+
+Subpackages (import lazily; this file stays jax-import-free so
+``repro.launch.dryrun`` can set XLA_FLAGS first):
+  core, models, configs, dist, optim, data, checkpoint, runtime,
+  kernels, launch.
+"""
+__version__ = "1.0.0"

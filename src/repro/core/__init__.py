@@ -1,0 +1,18 @@
+"""The paper's contribution: Tardis timestamp coherence, in JAX.
+
+Layers:
+  * :mod:`repro.core.protocol`   -- Tables I-III as pure functions,
+  * :mod:`repro.core.timestamps` -- base-delta compression (section IV-B),
+  * :mod:`repro.core.simulator`  -- vectorized multi-core simulator,
+  * :mod:`repro.core.directory`  -- full-map MSI / Ackwise baselines,
+  * :mod:`repro.core.traces`     -- SPLASH-2-like synthetic workloads,
+  * :mod:`repro.core.check`      -- sequential-consistency validators,
+  * :mod:`repro.core.store`      -- TardisStore: lease-coherent object store
+                                    for params / KV blocks (framework layer).
+"""
+from .geometry import Geometry
+from .simulator import SimConfig, SimResult, simulate
+from .traces import Trace, make_trace, TRACE_GENERATORS
+
+__all__ = ["Geometry", "SimConfig", "SimResult", "simulate", "Trace",
+           "make_trace", "TRACE_GENERATORS"]

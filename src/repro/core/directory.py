@@ -1,0 +1,256 @@
+"""Full-map MSI and Ackwise-style limited directory baselines.
+
+Same event-level transaction model as :func:`repro.core.simulator.tardis_mem`,
+with physical-time coherence: stores invalidate every sharer (and wait for
+acknowledgements -- latency is the farthest sharer's round trip, traffic is
+per-sharer), loads downgrade exclusive owners, and L1 evictions notify the
+directory (PUTS/PUTX) so the sharer list stays precise.
+
+``ackwise_k > 0`` switches the *cost model* to a limited directory with k
+sharer pointers: once a line has more than k sharers, invalidations are
+broadcast to every core (all N cores ack), as in ATAC/Ackwise.  Semantics are
+tracked with a precise bitmask either way; only traffic/latency differ.
+
+The directory's logical timestamp for SC checking is simply the global commit
+sequence (physical order) -- directory coherence *is* physical-time order.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import protocol as P
+from .geometry import (Geometry, addr_bank, addr_l1_set, addr_llc_set,
+                       hop_dist, pick_llc_victim, pick_way)
+from .simulator import _bump
+
+I32 = jnp.int32
+
+
+def _inv_cost(geom: Geometry, cfg, bank, mask, limited_bcast):
+    """(latency, traffic, n_msgs) of invalidating the cores in ``mask``.
+
+    Directed mode: INV + ACK per sharer, latency = farthest sharer.
+    Broadcast mode (Ackwise overflow): INV to all N cores, every core acks.
+    """
+    cores = jnp.arange(geom.n_cores, dtype=I32)
+    d = hop_dist(geom, bank, cores)
+    hop = cfg["hop"]
+    any_inv = mask.any()
+    lat_directed = jnp.where(any_inv, 2 * hop * jnp.max(jnp.where(mask, d, 0)) + 1, 0)
+    traf_directed = jnp.sum(jnp.where(mask, 2 * d, 0))
+    n_directed = 2 * jnp.sum(mask)
+    lat_bcast = jnp.where(any_inv, 2 * hop * jnp.max(d) + 1, 0)
+    traf_bcast = jnp.where(any_inv, jnp.sum(2 * d), 0)
+    n_bcast = jnp.where(any_inv, 2 * geom.n_cores, 0)
+    lat = jnp.where(limited_bcast, lat_bcast, lat_directed)
+    traf = jnp.where(limited_bcast, traf_bcast, traf_directed)
+    n = jnp.where(limited_bcast, n_bcast, n_directed)
+    return lat, traf, n
+
+
+def directory_mem(geom: Geometry, st, i, addr, is_store, active):
+    """One load/store transaction under (full-map | Ackwise) MSI."""
+    cfg = st["cfg"]
+    now = st["lru_clock"]
+    is_load = ~is_store
+    k = cfg["ackwise_k"]
+
+    # ---- L1 lookup -------------------------------------------------------
+    set1 = addr_l1_set(geom, addr)
+    tags1 = st["l1_tag"][i, set1]
+    sts1 = st["l1_st"][i, set1]
+    hit1, way1 = pick_way(tags1, sts1, st["l1_lru"][i, set1], addr)
+    line_st = sts1[way1]
+    line_ver = st["l1_ver"][i, set1, way1]
+    l1_ok = jnp.where(is_store, hit1 & (line_st == P.EXCLUSIVE),
+                      hit1 & (line_st != P.INVALID))
+    needs_llc = active & ~l1_ok
+    upgrade = needs_llc & is_store & hit1 & (line_st == P.SHARED)
+
+    # ---- LLC / directory lookup ------------------------------------------
+    bank = addr_bank(geom, addr)
+    gset = addr_llc_set(geom, addr)
+    tagsL = st["llc_tag"][gset]
+    stsL = st["llc_st"][gset]
+    lrusL = st["llc_lru"][gset]
+    ownersL = st["llc_owner"][gset]
+    hitL, wayL_hit = pick_way(tagsL, stsL, lrusL, addr)
+    victimL = pick_llc_victim(tagsL, stsL, lrusL, ownersL, i)
+    wayL = jnp.where(hitL, wayL_hit, victimL)
+    L_st = stsL[wayL]
+    L_ver = st["llc_ver"][gset, wayL]
+    L_dirty = st["llc_dirty"][gset, wayL]
+    L_tag = tagsL[wayL]
+    L_sharers = st["sharers"][gset, wayL]
+    owned = hitL & (L_st == P.EXCLUSIVE)
+    owner = ownersL[wayL]
+    missL = needs_llc & ~hitL
+
+    # ---- LLC victim eviction ----------------------------------------------
+    v_valid = missL & (L_st != P.INVALID)
+    v_owned = v_valid & (L_st == P.EXCLUSIVE)
+    v_owner = jnp.where(v_owned, owner, 0)
+    vset1 = addr_l1_set(geom, L_tag)
+    vo_hit, vo_way = pick_way(st["l1_tag"][v_owner, vset1],
+                              st["l1_st"][v_owner, vset1],
+                              st["l1_lru"][v_owner, vset1], L_tag)
+    vo_flush = v_owned & vo_hit
+    vo_ver = st["l1_ver"][v_owner, vset1, vo_way]
+    vo_dirty = st["l1_dirty"][v_owner, vset1, vo_way]
+    # invalidate every sharer of the victim line (directory must)
+    v_mask = jnp.where(v_valid & ~v_owned, L_sharers,
+                       jnp.zeros_like(L_sharers))
+    v_tag_match = st["l1_tag"][:, vset1, :] == L_tag           # (N, W1)
+    v_kill = v_mask[:, None] & v_tag_match
+    l1_st_a = st["l1_st"].at[:, vset1, :].set(
+        jnp.where(v_kill, P.INVALID, st["l1_st"][:, vset1, :]))
+    l1_st_a = l1_st_a.at[v_owner, vset1, vo_way].set(
+        jnp.where(vo_flush, P.INVALID, l1_st_a[v_owner, vset1, vo_way]))
+    victim_ver = jnp.where(vo_flush, vo_ver, L_ver)
+    victim_dirty = jnp.where(vo_flush, vo_dirty | L_dirty, L_dirty)
+    vaddr = jnp.where(v_valid, L_tag, 0)
+    mem_ver = st["mem_ver"].at[vaddr].set(
+        jnp.where(v_valid & victim_dirty, victim_ver, st["mem_ver"][vaddr]))
+    v_bcast = (k > 0) & (jnp.sum(v_mask) > k)
+    v_inv_lat, v_inv_traf, v_inv_msgs = _inv_cost(geom, cfg, bank, v_mask, v_bcast)
+
+    # ---- owner downgrade / flush for the requested line --------------------
+    o_hit, o_way = pick_way(st["l1_tag"][owner, set1],
+                            st["l1_st"][owner, set1],
+                            st["l1_lru"][owner, set1], addr)
+    o_act = needs_llc & owned & o_hit
+    o_ver = st["l1_ver"][owner, set1, o_way]
+    o_new_st = jnp.where(is_store, P.INVALID, P.SHARED)
+    l1_st_a = l1_st_a.at[owner, set1, o_way].set(
+        jnp.where(o_act, o_new_st, l1_st_a[owner, set1, o_way]))
+
+    # ---- invalidate sharers on GETX ----------------------------------------
+    others = L_sharers.at[i].set(False)
+    s_mask = jnp.where(needs_llc & is_store & hitL & ~owned, others,
+                       jnp.zeros_like(others))
+    s_tag_match = st["l1_tag"][:, set1, :] == addr
+    s_kill = s_mask[:, None] & s_tag_match
+    l1_st_a = l1_st_a.at[:, set1, :].set(
+        jnp.where(s_kill, P.INVALID, l1_st_a[:, set1, :]))
+    s_bcast = (k > 0) & (jnp.sum(s_mask) > k)
+    inv_lat, inv_traf, inv_msgs = _inv_cost(geom, cfg, bank, s_mask, s_bcast)
+
+    # ---- grant -------------------------------------------------------------
+    g_ver = jnp.where(owned, o_ver, jnp.where(hitL, L_ver, st["mem_ver"][addr]))
+    new_ver = st["store_count"][addr] + 1
+
+    # ---- directory entry update --------------------------------------------
+    upd = needs_llc
+    new_sharers = jnp.where(
+        is_store,
+        jnp.zeros_like(L_sharers),
+        jnp.where(missL, jnp.zeros_like(L_sharers),
+                  jnp.where(owned, jnp.zeros_like(L_sharers).at[owner].set(True),
+                            L_sharers)).at[i].set(True))
+    new_sharers = jnp.where(is_load & missL,
+                            jnp.zeros_like(L_sharers).at[i].set(True),
+                            new_sharers)
+    sharers = st["sharers"].at[gset, wayL].set(
+        jnp.where(upd, new_sharers, L_sharers))
+    llc_tag = st["llc_tag"].at[gset, wayL].set(jnp.where(upd, addr, L_tag))
+    llc_st = st["llc_st"].at[gset, wayL].set(
+        jnp.where(upd, jnp.where(is_store, P.EXCLUSIVE, P.SHARED), L_st))
+    llc_owner = st["llc_owner"].at[gset, wayL].set(
+        jnp.where(upd & is_store, i, jnp.where(upd, -1, ownersL[wayL])))
+    llc_ver = st["llc_ver"].at[gset, wayL].set(jnp.where(upd, g_ver, L_ver))
+    llc_dirty = st["llc_dirty"].at[gset, wayL].set(
+        jnp.where(upd, jnp.where(owned, True, hitL & L_dirty) & is_load, L_dirty))
+    llc_lru = st["llc_lru"].at[gset, wayL].set(jnp.where(upd, now, lrusL[wayL]))
+
+    # ---- L1 victim (PUTS / PUTX) -------------------------------------------
+    fill = needs_llc & ~hit1
+    v1_tag = tags1[way1]
+    v1_st = sts1[way1]
+    v1_valid = fill & (v1_st != P.INVALID)
+    v1_excl = v1_valid & (v1_st == P.EXCLUSIVE)
+    v1_shared = v1_valid & (v1_st == P.SHARED)
+    v1_ver = st["l1_ver"][i, set1, way1]
+    gsetv1 = addr_llc_set(geom, v1_tag)
+    bankv1 = addr_bank(geom, v1_tag)
+    hv1, wv1 = pick_way(llc_tag[gsetv1], llc_st[gsetv1], llc_lru[gsetv1], v1_tag)
+    v1_hit = v1_valid & hv1
+    # PUTS: drop my sharer bit; PUTX: write data back, line becomes unowned
+    old_sh_v1 = sharers[gsetv1, wv1]
+    sharers = sharers.at[gsetv1, wv1, i].set(
+        jnp.where(v1_hit & v1_shared, False, old_sh_v1[i]))
+    llc_st = llc_st.at[gsetv1, wv1].set(
+        jnp.where(v1_hit & v1_excl, P.SHARED, llc_st[gsetv1, wv1]))
+    llc_ver = llc_ver.at[gsetv1, wv1].set(
+        jnp.where(v1_hit & v1_excl, v1_ver, llc_ver[gsetv1, wv1]))
+    llc_dirty = llc_dirty.at[gsetv1, wv1].set(
+        jnp.where(v1_hit & v1_excl, True, llc_dirty[gsetv1, wv1]))
+    sharers = sharers.at[gsetv1, wv1].set(
+        jnp.where(v1_hit & v1_excl, jnp.zeros_like(old_sh_v1),
+                  sharers[gsetv1, wv1]))
+    mem_ver = mem_ver.at[jnp.where(v1_excl & ~hv1, v1_tag, 0)].set(
+        jnp.where(v1_excl & ~hv1, v1_ver,
+                  mem_ver[jnp.where(v1_excl & ~hv1, v1_tag, 0)]))
+
+    # ---- requester L1 -------------------------------------------------------
+    sel = active
+    f_st = jnp.where(is_store, P.EXCLUSIVE, jnp.where(l1_ok, line_st, P.SHARED))
+    f_ver = jnp.where(is_store, new_ver, jnp.where(l1_ok, line_ver, g_ver))
+    f_dirty = jnp.where(is_store, True,
+                        jnp.where(l1_ok, st["l1_dirty"][i, set1, way1], False))
+    l1_tag = st["l1_tag"].at[i, set1, way1].set(jnp.where(sel, addr, tags1[way1]))
+    l1_st_a = l1_st_a.at[i, set1, way1].set(
+        jnp.where(sel, f_st, l1_st_a[i, set1, way1]))
+    l1_ver = st["l1_ver"].at[i, set1, way1].set(
+        jnp.where(sel, f_ver, st["l1_ver"][i, set1, way1]))
+    l1_dirty = st["l1_dirty"].at[i, set1, way1].set(
+        jnp.where(sel, f_dirty, st["l1_dirty"][i, set1, way1]))
+    l1_lru = st["l1_lru"].at[i, set1, way1].set(
+        jnp.where(sel, now, st["l1_lru"][i, set1, way1]))
+    store_count = st["store_count"].at[addr].set(
+        jnp.where(sel & is_store, new_ver, st["store_count"][addr]))
+    ver_obs = jnp.where(is_store, new_ver, jnp.where(l1_ok, line_ver, g_ver))
+
+    # ---- latency & traffic --------------------------------------------------
+    hop = cfg["hop"]
+    d_ib = hop_dist(geom, i, bank)
+    d_bo = hop_dist(geom, bank, owner)
+    d_bvo = hop_dist(geom, bank, v_owner)
+    d_ibv1 = hop_dist(geom, i, bankv1)
+    llc_leg = 2 * hop * d_ib + cfg["llc_lat"]
+    owner_leg = jnp.where(o_act, 2 * hop * d_bo + 1, 0)
+    vflush_leg = jnp.where(vo_flush, 2 * hop * d_bvo + 1, 0)
+    dram_leg = jnp.where(missL, cfg["dram_lat"] + vflush_leg + v_inv_lat, 0)
+    lat_full = llc_leg + owner_leg + dram_leg + inv_lat
+    lat = jnp.where(needs_llc, jnp.maximum(1, lat_full - cfg["ooo_hide"]), 1)
+
+    reply_flits = jnp.where(upgrade & ~owned, 1, 5)
+    traffic = jnp.where(needs_llc, (1 + reply_flits) * d_ib, 0)
+    traffic += jnp.where(o_act, (1 + 5) * d_bo, 0)
+    traffic += inv_traf + v_inv_traf
+    traffic += jnp.where(missL, 1 + 5, 0)
+    traffic += jnp.where(v_valid & victim_dirty, 5, 0)
+    traffic += jnp.where(vo_flush, (1 + 5) * d_bvo, 0)
+    traffic += jnp.where(v1_hit & v1_shared, 1 * d_ibv1, 0)     # PUTS
+    traffic += jnp.where(v1_excl, 5 * d_ibv1, 0)                # PUTX
+    msgs = (jnp.where(needs_llc, 2, 0) + jnp.where(o_act, 2, 0)
+            + jnp.where(missL, 2, 0) + jnp.where(vo_flush, 2, 0)
+            + jnp.where(v1_valid, 1, 0) + inv_msgs + v_inv_msgs)
+
+    stats = _bump(
+        st["stats"],
+        traffic=jnp.where(active, traffic, 0),
+        msgs=jnp.where(active, msgs, 0),
+        n_llc_req=needs_llc, n_dram=missL,
+        n_inv_msgs=inv_msgs + v_inv_msgs,
+        n_l1_miss=needs_llc,
+        n_evict_msgs=jnp.where(v1_valid, 1, 0),
+    )
+
+    new_st = dict(st, l1_tag=l1_tag, l1_st=l1_st_a, l1_ver=l1_ver,
+                  l1_dirty=l1_dirty, l1_lru=l1_lru, llc_tag=llc_tag,
+                  llc_st=llc_st, llc_owner=llc_owner, llc_ver=llc_ver,
+                  llc_dirty=llc_dirty, llc_lru=llc_lru, sharers=sharers,
+                  mem_ver=mem_ver, store_count=store_count, stats=stats)
+    # directory "timestamp" for SC logging = commit sequence number
+    op_ts = st["steps"]
+    return new_st, lat, op_ts, ver_obs

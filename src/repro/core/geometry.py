@@ -1,0 +1,95 @@
+"""Cache / NoC geometry shared by the Tardis and directory simulators.
+
+The simulated machine mirrors the paper's Table V at reduced cache sizes
+(traces are scaled down accordingly): per-core private L1, an address-
+interleaved shared-LLC slice per core ("bank"), a 2-D mesh NoC with XY
+routing, and per-bank memory controllers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """Static (compile-time) machine shape."""
+    n_cores: int = 64
+    l1_sets: int = 32
+    l1_ways: int = 4
+    llc_sets: int = 64          # sets per bank; one bank per core
+    llc_ways: int = 4
+    n_addr: int = 1 << 16       # DRAM image size (lines)
+    trace_len: int = 0          # filled from the trace
+    log_size: int = 0           # 0 = logging disabled
+
+    @property
+    def grid(self) -> int:
+        return int(math.ceil(math.sqrt(self.n_cores)))
+
+    @property
+    def llc_sets_total(self) -> int:
+        return self.n_cores * self.llc_sets
+
+
+def core_xy(geom: Geometry, i):
+    g = geom.grid
+    return i % g, i // g
+
+
+def hop_dist(geom: Geometry, a, b):
+    """Manhattan distance between tiles a and b on the mesh."""
+    ax, ay = core_xy(geom, a)
+    bx, by = core_xy(geom, b)
+    return jnp.abs(ax - bx) + jnp.abs(ay - by)
+
+
+def addr_bank(geom: Geometry, addr):
+    """Home LLC slice (== home timestamp manager) of an address."""
+    return addr % geom.n_cores
+
+
+def addr_llc_set(geom: Geometry, addr):
+    """Global LLC set index: bank-major so one bank is a contiguous slab."""
+    bank = addr_bank(geom, addr)
+    return bank * geom.llc_sets + (addr // geom.n_cores) % geom.llc_sets
+
+
+def addr_l1_set(geom: Geometry, addr):
+    return addr % geom.l1_sets
+
+
+def pick_way(tags, states, lrus, addr):
+    """(hit, way) selection for one cache set.
+
+    Returns the matching way on a hit, otherwise the fill victim:
+    invalid ways first, then least-recently-used.  ``states`` is only used
+    for validity (INVALID == 0).
+    """
+    valid = states != 0
+    match = valid & (tags == addr)
+    hit = match.any()
+    hit_way = jnp.argmax(match)
+    inv_way = jnp.argmax(~valid)
+    has_inv = (~valid).any()
+    lru_way = jnp.argmin(jnp.where(valid, lrus, INT_MAX))
+    fill_way = jnp.where(has_inv, inv_way, lru_way)
+    return hit, jnp.where(hit, hit_way, fill_way)
+
+
+def pick_llc_victim(tags, states, lrus, owners, requester):
+    """LLC fill-victim choice: invalid > shared-LRU > exclusive-LRU, and
+    never a line exclusively owned by the requester mid-transaction."""
+    valid = states != 0
+    has_inv = (~valid).any()
+    inv_way = jnp.argmax(~valid)
+    # penalize exclusive lines, forbid requester-owned ones
+    penalty = jnp.where(states == 2, 1 << 20, 0)
+    penalty = jnp.where((states == 2) & (owners == requester), 1 << 29, penalty)
+    score = jnp.where(valid, lrus + penalty, INT_MAX)
+    lru_way = jnp.argmin(score)
+    return jnp.where(has_inv, inv_way, lru_way)

@@ -1,0 +1,197 @@
+"""Tardis protocol rules (paper Tables I-III) as pure, branchless JAX functions.
+
+Every rule here is a direct transcription of the timestamp-management tables in
+the paper.  They are shared by three consumers:
+
+  * ``repro.core.simulator``  -- the multi-core cache-hierarchy simulator,
+  * ``repro.core.store``      -- the host-level TardisStore (params / KV blocks),
+  * ``repro.kernels.tardis_lease`` -- the batched Pallas metadata kernel
+    (``ref.py`` calls straight into these functions as the oracle).
+
+All functions are scalar-shaped jnp expressions; they vmap/vectorize freely.
+Timestamps are int32 logical counters (the *compressed* on-chip representation
+is handled by :mod:`repro.core.timestamps`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Cache-line / block states (shared by private cache and timestamp manager).
+INVALID = 0
+SHARED = 1
+EXCLUSIVE = 2  # paper's Exclusive == owned/modified (MSI "M" merged)
+
+# ---------------------------------------------------------------------------
+# Table I -- Tardis without private memory
+# ---------------------------------------------------------------------------
+
+def load_no_cache(pts, wts, rts):
+    """Load served directly by the timestamp manager (Table I, column 1).
+
+    Returns (new_pts, new_rts).  ``pts <- max(pts, wts)``; the line's read
+    timestamp records the latest read: ``rts <- max(pts, rts)``.
+    """
+    new_pts = jnp.maximum(pts, wts)
+    new_rts = jnp.maximum(new_pts, rts)
+    return new_pts, new_rts
+
+
+def store_no_cache(pts, wts, rts):
+    """Store served directly by the timestamp manager (Table I, column 2).
+
+    The writer jumps ahead of every read lease: ``pts <- max(pts, rts + 1)``,
+    and the new version is valid exactly from that instant (wts = rts = pts).
+    Returns (new_pts, new_wts, new_rts).
+    """
+    new_pts = jnp.maximum(pts, rts + 1)
+    return new_pts, new_pts, new_pts
+
+
+# ---------------------------------------------------------------------------
+# Table II -- private-cache transitions
+# ---------------------------------------------------------------------------
+
+def load_hit_shared(pts, wts):
+    """L1 load hit on an unexpired Shared line: pts <- max(pts, wts)."""
+    return jnp.maximum(pts, wts)
+
+
+def load_hit_exclusive(pts, wts, rts):
+    """L1 load hit on an Exclusive line.
+
+    ``pts <- max(pts, wts)``; ``rts <- max(pts, rts)`` (the owner tracks its
+    own last read).  Returns (new_pts, new_rts).
+    """
+    new_pts = jnp.maximum(pts, wts)
+    new_rts = jnp.maximum(new_pts, rts)
+    return new_pts, new_rts
+
+
+def store_hit_exclusive(pts, rts):
+    """L1 store hit on an Exclusive line (Table II, store column).
+
+    The write must be ordered after the last read of the old version:
+    ``ts = max(pts, rts + 1)``; wts = rts = ts.  Returns (new_pts, new_wts,
+    new_rts).
+    """
+    ts = jnp.maximum(pts, rts + 1)
+    return ts, ts, ts
+
+
+def store_hit_private(pts, rts):
+    """Private-write optimization (paper section IV-C).
+
+    If the line's *modified* bit is already set (this core wrote it before and
+    nobody else observed it), repeated stores need not advance logical time:
+    ``ts = max(pts, rts)`` -- physical time orders them implicitly.
+    """
+    ts = jnp.maximum(pts, rts)
+    return ts, ts, ts
+
+
+def shared_expired(pts, rts):
+    """True when a Shared line's lease has run out for this core (pts > rts)."""
+    return pts > rts
+
+
+def writeback_rts(line_wts, line_rts, req_pts, lease):
+    """Owner-side rts update on WB_REQ (Table II, last column).
+
+    The timestamp manager asks for ``reqM.rts = req_pts + lease``; the owner
+    extends to ``max(D.rts, D.wts + lease, reqM.rts)`` and downgrades to
+    Shared, keeping the line readable locally until the new lease expires.
+    """
+    return jnp.maximum(jnp.maximum(line_rts, line_wts + lease),
+                       req_pts + lease)
+
+
+# ---------------------------------------------------------------------------
+# Table III -- timestamp-manager transitions
+# ---------------------------------------------------------------------------
+
+def lease_extend(llc_wts, llc_rts, req_pts, lease):
+    """SH_REQ on a Shared LLC line: new end-of-lease timestamp.
+
+    ``D.rts <- max(D.rts, D.wts + lease, reqM.pts + lease)``.
+    """
+    return jnp.maximum(jnp.maximum(llc_rts, llc_wts + lease),
+                       req_pts + lease)
+
+
+def renewable(req_wts, llc_wts):
+    """A renewal succeeds without a data payload iff the requester's cached
+    version matches the manager's (RENEW_REP / UPGRADE_REP path)."""
+    return req_wts == llc_wts
+
+
+def dram_fill_ts(mts):
+    """Line loaded from DRAM: wts = rts = mts (Table III, DRAM_REP column)."""
+    return mts, mts
+
+
+def evict_mts(mts, line_rts):
+    """LLC eviction folds the line's read lease into the per-manager mts."""
+    return jnp.maximum(mts, line_rts)
+
+
+# ---------------------------------------------------------------------------
+# Derived helpers used by the batched store / kernel paths
+# ---------------------------------------------------------------------------
+
+def batched_read_check(pts, wts, rts):
+    """Vectorized lease check for a block table.
+
+    Given a reader's ``pts`` (scalar or broadcastable) and per-block (wts,
+    rts), returns (readable, new_pts) where ``readable`` marks blocks whose
+    lease covers ``pts`` and ``new_pts`` is the reader's program timestamp
+    after consuming every readable block (max over their wts).
+    """
+    readable = pts <= rts
+    consumed = jnp.where(readable, wts, 0)
+    new_pts = jnp.maximum(pts, jnp.max(consumed, initial=0))
+    return readable, new_pts
+
+
+def batched_write_advance(pts, rts, mask):
+    """Vectorized jump-ahead for a set of blocks being written.
+
+    The writer's new pts clears every masked block's read lease:
+    ``pts' = max(pts, max_i(rts_i) + 1)``; each written block gets
+    wts = rts = pts'.  Returns (new_pts, new_wts, new_rts) with the
+    timestamps broadcast over the mask.
+    """
+    top = jnp.max(jnp.where(mask, rts, -1), initial=-1)
+    new_pts = jnp.maximum(pts, top + 1)
+    new_wts = jnp.where(mask, new_pts, 0)
+    new_rts = jnp.where(mask, new_pts, 0)
+    return new_pts, new_wts, new_rts
+
+
+MESSAGE_FLITS = {
+    # message type: header flits + timestamp flits + data flits
+    # (128-bit flits; 64B line = 4 flits; one flit carries two 64b timestamps)
+    "SH_REQ": 2,        # header + (pts, wts)
+    "EX_REQ": 2,        # header + wts
+    "FLUSH_REQ": 1,
+    "WB_REQ": 2,        # header + rts
+    "SH_REP": 6,        # header + (wts, rts) + data
+    "EX_REP": 6,
+    "UPGRADE_REP": 2,   # header + rts, no data
+    "RENEW_REP": 2,     # header + rts, no data
+    "FLUSH_REP": 6,
+    "WB_REP": 6,
+    "DRAM_ST_REQ": 5,
+    "DRAM_LD_REQ": 1,
+    "DRAM_LD_REP": 5,
+    # directory-protocol messages
+    "GETS": 1,
+    "GETX": 1,
+    "PUTS": 1,
+    "PUTX": 5,
+    "INV": 1,
+    "INV_ACK": 1,
+    "DOWNGRADE": 1,
+    "DATA": 5,
+    "UPGRADE": 1,
+    "ACK": 1,
+}

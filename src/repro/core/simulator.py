@@ -1,0 +1,618 @@
+"""Vectorized multi-core coherence simulator (Tardis + directory baselines).
+
+Execution model
+---------------
+An event-level model of the paper's Graphite setup: cores execute their trace
+in program order; the global interleaving is produced by always stepping the
+core with the smallest local clock (ties to the lowest id).  Each memory
+operation is an *atomic transaction* against the cache hierarchy -- the
+protocol transition, its latency, and its NoC traffic are computed in one
+simulator step.  This keeps every protocol rule exact (timestamps, leases,
+renewals, sharer sets, ...) while approximating only intra-transaction
+concurrency, which affects both protocols identically.
+
+The whole simulation is a single ``lax.while_loop`` over a dict-of-arrays
+state, so it jit-compiles once per (geometry, protocol) and every paper knob
+(lease, self-increment period, speculation, delta-ts width, Ackwise k, ...)
+is a *traced* scalar -- parameter sweeps reuse the compiled step.
+
+Approximations (documented in EXPERIMENTS.md):
+  * spin loops poll with exponential backoff (1..backoff_cap cycles) purely to
+    bound simulation steps; polls still count as cache accesses (self-inc),
+  * speculation/OoO are modeled through effective latency (success hides the
+    renewal round trip; failure pays round trip + flush penalty),
+  * base-delta compression is an *accounting* model: arrays keep absolute
+    timestamps, rebases charge their cost and invalidate long-expired
+    private Shared lines exactly as the clamping rule would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import protocol as P
+from .geometry import (Geometry, INT_MAX, addr_bank, addr_l1_set,
+                       addr_llc_set, hop_dist, pick_llc_victim, pick_way)
+from .traces import BARRIER, END, LOAD, SPIN, STORE, Trace
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """Dynamic (traced) simulation parameters.  Defaults = paper Table V."""
+    lease: int = 10
+    selfinc_period: int = 100
+    speculate: bool = True
+    ooo_hide: int = 0            # >0 models an OoO window hiding miss latency
+    private_write_opt: bool = True
+    ts_bits: int = 20            # 0 disables compression accounting (64-bit)
+    rebase_l1: int = 128         # cycles (128 ns @ 1 GHz)
+    rebase_l2: int = 1024
+    hop_cycles: int = 2
+    llc_lat: int = 8
+    dram_lat: int = 100
+    flush_penalty: int = 8       # misspeculation rollback
+    ackwise_k: int = 0           # directory only: 0 = full-map MSI
+    estate: bool = False         # paper section IV-D: E-state extension
+    spin_backoff_cap: int = 32
+    barrier_cost: int = 4
+    max_steps: int = 2_000_000
+
+    def as_jnp(self) -> Dict[str, jnp.ndarray]:
+        return {
+            "lease": I32(self.lease),
+            "period": I32(self.selfinc_period),
+            "spec": I32(1 if self.speculate else 0),
+            "ooo_hide": I32(self.ooo_hide),
+            "pw_opt": I32(1 if self.private_write_opt else 0),
+            "ts_bits": I32(self.ts_bits),
+            "rebase_l1": I32(self.rebase_l1),
+            "rebase_l2": I32(self.rebase_l2),
+            "hop": I32(self.hop_cycles),
+            "llc_lat": I32(self.llc_lat),
+            "dram_lat": I32(self.dram_lat),
+            "flush_pen": I32(self.flush_penalty),
+            "ackwise_k": I32(self.ackwise_k),
+            "estate": I32(1 if self.estate else 0),
+            "backoff_cap": I32(self.spin_backoff_cap),
+            "barrier_cost": I32(self.barrier_cost),
+            "max_steps": I32(self.max_steps),
+        }
+
+
+STAT_KEYS = (
+    "ops_done", "traffic", "msgs", "n_renew", "n_renew_ok", "n_misspec",
+    "n_upgrade_ok", "n_llc_req", "n_dram", "n_ts_incr", "n_selfinc",
+    "n_rebase_l1", "n_rebase_l2", "n_rebase_inval", "n_inv_msgs",
+    "n_spin_polls", "n_l1_miss", "n_evict_msgs", "n_egrant",
+)
+
+
+def init_state(geom: Geometry, trace: Trace, cfg: Dict[str, jnp.ndarray],
+               directory: bool):
+    n, s1, w1 = geom.n_cores, geom.l1_sets, geom.l1_ways
+    s2, w2 = geom.llc_sets_total, geom.llc_ways
+    zeros = lambda *sh: jnp.zeros(sh, I32)
+    st = {
+        "cfg": cfg,
+        # core state
+        "clock": zeros(n), "pts": jnp.ones((n,), I32), "idx": zeros(n),
+        "done": jnp.zeros((n,), bool), "blocked": jnp.zeros((n,), bool),
+        "arrived": jnp.zeros((n,), bool), "acc": zeros(n),
+        "spin_iter": zeros(n),
+        # private L1
+        "l1_tag": jnp.full((n, s1, w1), -1, I32), "l1_st": zeros(n, s1, w1),
+        "l1_wts": zeros(n, s1, w1), "l1_rts": zeros(n, s1, w1),
+        "l1_ver": zeros(n, s1, w1), "l1_dirty": jnp.zeros((n, s1, w1), bool),
+        "l1_lru": zeros(n, s1, w1),
+        # shared LLC (banked)
+        "llc_tag": jnp.full((s2, w2), -1, I32), "llc_st": zeros(s2, w2),
+        "llc_wts": zeros(s2, w2), "llc_rts": zeros(s2, w2),
+        "llc_owner": jnp.full((s2, w2), -1, I32), "llc_ver": zeros(s2, w2),
+        "llc_dirty": jnp.zeros((s2, w2), bool), "llc_lru": zeros(s2, w2),
+        "llc_acc": jnp.zeros((s2, w2), bool),   # accessed-since-fill (E ext.)
+        # DRAM image + per-bank memory timestamp + global store counters
+        "mem_ver": zeros(geom.n_addr), "mts": jnp.ones((n,), I32),
+        "store_count": zeros(geom.n_addr),
+        # timestamp-compression accounting
+        "bts_l1": zeros(n), "bts_llc": zeros(n),
+        "maxts_l1": zeros(n), "maxts_llc": zeros(n),
+        # traces
+        "op_type": jnp.asarray(trace.op_type), "op_addr": jnp.asarray(trace.op_addr),
+        "op_aux": jnp.asarray(trace.op_aux), "op_think": jnp.asarray(trace.op_think),
+        "lru_clock": I32(0), "steps": I32(0), "aborted": jnp.zeros((), bool),
+        "stats": {k: F32(0.0) for k in STAT_KEYS},
+    }
+    if directory:
+        st["sharers"] = jnp.zeros((s2, w2, n), bool)
+    if geom.log_size:
+        z = lambda: jnp.zeros((geom.log_size,), I32)
+        st["log"] = {"core": z(), "kind": z(), "addr": z(), "ts": z(),
+                     "ver": z(), "n": I32(0)}
+    return st
+
+
+def _bump(stats, **deltas):
+    out = dict(stats)
+    for k, v in deltas.items():
+        out[k] = stats[k] + F32(0) + jnp.asarray(v, F32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tardis memory transaction (Tables II & III)
+# ---------------------------------------------------------------------------
+
+def tardis_mem(geom: Geometry, st, i, addr, is_store, active):
+    """One load/store transaction under Tardis.
+
+    Returns (new_state, latency, op_ts, observed_version).
+    All state updates are masked by ``active``.
+    """
+    cfg = st["cfg"]
+    lease, spec = cfg["lease"], cfg["spec"]
+    now = st["lru_clock"]
+    pts = st["pts"][i]
+    is_load = ~is_store
+
+    # ---- L1 lookup -------------------------------------------------------
+    set1 = addr_l1_set(geom, addr)
+    tags1 = st["l1_tag"][i, set1]
+    sts1 = st["l1_st"][i, set1]
+    lrus1 = st["l1_lru"][i, set1]
+    hit1, way1 = pick_way(tags1, sts1, lrus1, addr)
+    line_st = sts1[way1]
+    line_wts = st["l1_wts"][i, set1, way1]
+    line_rts = st["l1_rts"][i, set1, way1]
+    line_ver = st["l1_ver"][i, set1, way1]
+    line_dirty = st["l1_dirty"][i, set1, way1]
+
+    expired = hit1 & (line_st == P.SHARED) & (pts > line_rts)
+    l1_ok = jnp.where(
+        is_store,
+        hit1 & (line_st == P.EXCLUSIVE),
+        hit1 & ((line_st == P.EXCLUSIVE)
+                | ((line_st == P.SHARED) & (pts <= line_rts))))
+    needs_llc = active & ~l1_ok
+    renewal = needs_llc & is_load & expired
+
+    # ---- LLC lookup ------------------------------------------------------
+    bank = addr_bank(geom, addr)
+    gset = addr_llc_set(geom, addr)
+    tagsL = st["llc_tag"][gset]
+    stsL = st["llc_st"][gset]
+    lrusL = st["llc_lru"][gset]
+    ownersL = st["llc_owner"][gset]
+    hitL, wayL_hit = pick_way(tagsL, stsL, lrusL, addr)
+    victimL = pick_llc_victim(tagsL, stsL, lrusL, ownersL, i)
+    wayL = jnp.where(hitL, wayL_hit, victimL)
+    L_st = stsL[wayL]
+    L_wts = st["llc_wts"][gset, wayL]
+    L_rts = st["llc_rts"][gset, wayL]
+    L_ver = st["llc_ver"][gset, wayL]
+    L_dirty = st["llc_dirty"][gset, wayL]
+    L_acc = st["llc_acc"][gset, wayL]
+    L_tag = tagsL[wayL]
+    owned = hitL & (L_st == P.EXCLUSIVE)
+    owner = ownersL[wayL]
+    missL = needs_llc & ~hitL
+    # E-state extension (paper IV-D): a load on a line nobody has touched
+    # since it entered the LLC is granted exclusively -- it will never
+    # expire or renew while private.
+    grant_e = (needs_llc & is_load & (cfg["estate"] == 1)
+               & (missL | (hitL & (L_st == P.SHARED) & ~L_acc)))
+
+    # ---- LLC victim eviction (fill path only) ----------------------------
+    v_valid = missL & (L_st != P.INVALID)          # wayL is the victim slot
+    v_owned = v_valid & (L_st == P.EXCLUSIVE)
+    v_owner = jnp.where(v_owned, owner, 0)
+    vset1 = addr_l1_set(geom, L_tag)
+    vo_tags = st["l1_tag"][v_owner, vset1]
+    vo_sts = st["l1_st"][v_owner, vset1]
+    vo_hit, vo_way = pick_way(vo_tags, vo_sts,
+                              st["l1_lru"][v_owner, vset1], L_tag)
+    vo_flush = v_owned & vo_hit
+    vo_rts = st["l1_rts"][v_owner, vset1, vo_way]
+    vo_ver = st["l1_ver"][v_owner, vset1, vo_way]
+    vo_dirty = st["l1_dirty"][v_owner, vset1, vo_way]
+    victim_rts = jnp.where(vo_flush, vo_rts, L_rts)
+    victim_ver = jnp.where(vo_flush, vo_ver, L_ver)
+    victim_dirty = jnp.where(vo_flush, vo_dirty | L_dirty, L_dirty)
+    # flush the victim-owner's L1 copy
+    l1_st_a = st["l1_st"].at[v_owner, vset1, vo_way].set(
+        jnp.where(vo_flush, P.INVALID, st["l1_st"][v_owner, vset1, vo_way]))
+    # DRAM writeback + mts fold
+    vaddr = jnp.where(v_valid, L_tag, 0)
+    mem_ver = st["mem_ver"].at[vaddr].set(
+        jnp.where(v_valid & victim_dirty, victim_ver, st["mem_ver"][vaddr]))
+    mts = st["mts"].at[bank].set(
+        jnp.where(v_valid, jnp.maximum(st["mts"][bank], victim_rts),
+                  st["mts"][bank]))
+    mts_bank = mts[bank]
+
+    # ---- owner write-back / flush for the requested line ------------------
+    o_tags = st["l1_tag"][owner, set1]
+    o_sts = st["l1_st"][owner, set1]
+    o_hit, o_way = pick_way(o_tags, o_sts, st["l1_lru"][owner, set1], addr)
+    o_act = needs_llc & owned & o_hit              # invariant: holds when owned
+    o_wts = st["l1_wts"][owner, set1, o_way]
+    o_rts = st["l1_rts"][owner, set1, o_way]
+    o_ver = st["l1_ver"][owner, set1, o_way]
+    wb_rts = P.writeback_rts(o_wts, o_rts, pts, lease)
+    # load -> WB_REQ: owner downgrades to Shared with extended rts
+    # store -> FLUSH_REQ: owner invalidates
+    o_new_st = jnp.where(is_store, P.INVALID, P.SHARED)
+    l1_st_a = l1_st_a.at[owner, set1, o_way].set(
+        jnp.where(o_act, o_new_st, l1_st_a[owner, set1, o_way]))
+    l1_rts_a = st["l1_rts"].at[owner, set1, o_way].set(
+        jnp.where(o_act & is_load, wb_rts, o_rts))
+
+    # ---- grant values the manager serves ----------------------------------
+    g_wts = jnp.where(owned, o_wts, jnp.where(hitL, L_wts, mts_bank))
+    g_rts_raw = jnp.where(owned, jnp.where(is_load, wb_rts, o_rts),
+                          jnp.where(hitL, L_rts, mts_bank))
+    g_ver = jnp.where(owned, o_ver, jnp.where(hitL, L_ver, st["mem_ver"][addr]))
+    g_dirty = jnp.where(owned, True, jnp.where(hitL, L_dirty, False))
+    new_llc_rts = P.lease_extend(g_wts, g_rts_raw, pts, lease)
+    renew_ok = renewal & (line_wts == g_wts)
+    upgrade_ok = needs_llc & is_store & hit1 & (line_wts == g_wts) & ~owned & hitL
+
+    # ---- LLC line update ---------------------------------------------------
+    upd = needs_llc
+    excl_grant = is_store | grant_e
+    llc_tag = st["llc_tag"].at[gset, wayL].set(jnp.where(upd, addr, L_tag))
+    llc_st = st["llc_st"].at[gset, wayL].set(
+        jnp.where(upd, jnp.where(excl_grant, P.EXCLUSIVE, P.SHARED), L_st))
+    llc_wts = st["llc_wts"].at[gset, wayL].set(jnp.where(upd, g_wts, L_wts))
+    llc_rts = st["llc_rts"].at[gset, wayL].set(
+        jnp.where(upd, jnp.where(is_load, new_llc_rts, g_rts_raw), L_rts))
+    llc_owner = st["llc_owner"].at[gset, wayL].set(
+        jnp.where(upd & excl_grant, i, jnp.where(upd, -1, ownersL[wayL])))
+    llc_acc = st["llc_acc"].at[gset, wayL].set(
+        jnp.where(upd, True, L_acc))
+    llc_ver = st["llc_ver"].at[gset, wayL].set(jnp.where(upd, g_ver, L_ver))
+    llc_dirty = st["llc_dirty"].at[gset, wayL].set(
+        jnp.where(upd, g_dirty & is_load, L_dirty))
+    llc_lru = st["llc_lru"].at[gset, wayL].set(jnp.where(upd, now, lrusL[wayL]))
+
+    # ---- L1 victim write-back (Exclusive lines flush to their LLC slot) ---
+    fill = needs_llc & ~hit1
+    v1_tag = tags1[way1]
+    v1_st = sts1[way1]
+    v1_valid = fill & (v1_st != P.INVALID)
+    v1_excl = v1_valid & (v1_st == P.EXCLUSIVE)
+    v1_wts = st["l1_wts"][i, set1, way1]
+    v1_rts = st["l1_rts"][i, set1, way1]
+    v1_ver = st["l1_ver"][i, set1, way1]
+    gsetv1 = addr_llc_set(geom, v1_tag)
+    bankv1 = addr_bank(geom, v1_tag)
+    tv1 = llc_tag[gsetv1]
+    sv1 = llc_st[gsetv1]
+    hv1, wv1 = pick_way(tv1, sv1, llc_lru[gsetv1], v1_tag)
+    v1_to_llc = v1_excl & hv1
+    v1_to_dram = v1_excl & ~hv1
+    llc_st = llc_st.at[gsetv1, wv1].set(
+        jnp.where(v1_to_llc, P.SHARED, llc_st[gsetv1, wv1]))
+    llc_wts = llc_wts.at[gsetv1, wv1].set(
+        jnp.where(v1_to_llc, v1_wts, llc_wts[gsetv1, wv1]))
+    llc_rts = llc_rts.at[gsetv1, wv1].set(
+        jnp.where(v1_to_llc, v1_rts, llc_rts[gsetv1, wv1]))
+    llc_ver = llc_ver.at[gsetv1, wv1].set(
+        jnp.where(v1_to_llc, v1_ver, llc_ver[gsetv1, wv1]))
+    llc_dirty = llc_dirty.at[gsetv1, wv1].set(
+        jnp.where(v1_to_llc, True, llc_dirty[gsetv1, wv1]))
+    # a written-back line has no sharers left: next toucher may take it E
+    llc_acc = llc_acc.at[gsetv1, wv1].set(
+        jnp.where(v1_to_llc, False, llc_acc[gsetv1, wv1]))
+    mem_ver = mem_ver.at[jnp.where(v1_to_dram, v1_tag, 0)].set(
+        jnp.where(v1_to_dram, v1_ver, mem_ver[jnp.where(v1_to_dram, v1_tag, 0)]))
+    mts = mts.at[bankv1].set(
+        jnp.where(v1_to_dram, jnp.maximum(mts[bankv1], v1_rts), mts[bankv1]))
+
+    # ---- requester L1 + timestamps ----------------------------------------
+    new_ver = st["store_count"][addr] + 1
+    pw = (cfg["pw_opt"] == 1) & line_dirty
+    ts_hitE = jnp.where(pw, jnp.maximum(pts, line_rts),
+                        jnp.maximum(pts, line_rts + 1))
+    ts_fill = jnp.maximum(pts, g_rts_raw + 1)
+    store_ts = jnp.where(l1_ok, ts_hitE, ts_fill)
+    obs_wts = jnp.where(l1_ok | renew_ok, line_wts, g_wts)
+    load_pts = jnp.maximum(pts, obs_wts)
+    new_pts = jnp.where(active, jnp.where(is_store, store_ts, load_pts), pts)
+    op_ts = new_pts
+
+    # final L1 line (requester)
+    f_st = jnp.where(is_store | grant_e, P.EXCLUSIVE,
+                     jnp.where(l1_ok, line_st, P.SHARED))
+    f_wts = jnp.where(is_store, store_ts, jnp.where(l1_ok, line_wts, g_wts))
+    # loads: E-hit tracks own last read; S keeps lease / takes the new lease
+    rts_ehit = jnp.maximum(load_pts, line_rts)
+    f_rts_load = jnp.where(
+        l1_ok & (line_st == P.EXCLUSIVE), rts_ehit,
+        jnp.where(l1_ok, line_rts,
+                  jnp.where(grant_e, jnp.maximum(load_pts, g_rts_raw),
+                            new_llc_rts)))
+    f_rts = jnp.where(is_store, store_ts, f_rts_load)
+    f_ver = jnp.where(is_store, new_ver,
+                      jnp.where(l1_ok | renew_ok, line_ver, g_ver))
+    f_dirty = jnp.where(is_store, True,
+                        jnp.where(l1_ok | renew_ok, line_dirty, False))
+    sel = active
+    l1_tag = st["l1_tag"].at[i, set1, way1].set(jnp.where(sel, addr, tags1[way1]))
+    l1_st_a = l1_st_a.at[i, set1, way1].set(
+        jnp.where(sel, f_st, l1_st_a[i, set1, way1]))
+    l1_wts = st["l1_wts"].at[i, set1, way1].set(
+        jnp.where(sel, f_wts, st["l1_wts"][i, set1, way1]))
+    l1_rts_a = l1_rts_a.at[i, set1, way1].set(
+        jnp.where(sel, f_rts, l1_rts_a[i, set1, way1]))
+    l1_ver = st["l1_ver"].at[i, set1, way1].set(
+        jnp.where(sel, f_ver, st["l1_ver"][i, set1, way1]))
+    l1_dirty = st["l1_dirty"].at[i, set1, way1].set(
+        jnp.where(sel, f_dirty, st["l1_dirty"][i, set1, way1]))
+    l1_lru = st["l1_lru"].at[i, set1, way1].set(
+        jnp.where(sel, now, st["l1_lru"][i, set1, way1]))
+    store_count = st["store_count"].at[addr].set(
+        jnp.where(sel & is_store, new_ver, st["store_count"][addr]))
+    ver_obs = jnp.where(is_store, new_ver,
+                        jnp.where(l1_ok | renew_ok, line_ver, g_ver))
+
+    # ---- latency & traffic -------------------------------------------------
+    hop = cfg["hop"]
+    d_ib = hop_dist(geom, i, bank)
+    d_bo = hop_dist(geom, bank, owner)
+    d_bvo = hop_dist(geom, bank, v_owner)
+    d_ibv1 = hop_dist(geom, i, bankv1)
+    llc_leg = 2 * hop * d_ib + cfg["llc_lat"]
+    owner_leg = jnp.where(owned, 2 * hop * d_bo + 1, 0)
+    vflush_leg = jnp.where(vo_flush, 2 * hop * d_bvo + 1, 0)
+    dram_leg = jnp.where(missL, cfg["dram_lat"] + vflush_leg, 0)
+    lat_full = llc_leg + owner_leg + dram_leg
+    lat_exposed = jnp.maximum(1, lat_full - cfg["ooo_hide"])
+    lat = jnp.where(
+        ~needs_llc, 1,
+        jnp.where(renewal & renew_ok & (spec == 1), 1,
+                  jnp.where(renewal & ~renew_ok,
+                            lat_exposed + spec * cfg["flush_pen"],
+                            lat_exposed)))
+
+    # paper section VI-B-2: a successful renewal is a single-flit message
+    reply_flits = jnp.where(is_load,
+                            jnp.where(renew_ok, 1, 6),
+                            jnp.where(upgrade_ok, 1, 6))
+    traffic = jnp.where(needs_llc, (2 + reply_flits) * d_ib, 0)
+    traffic += jnp.where(o_act,
+                         jnp.where(is_load, (2 + 6) * d_bo, (1 + 6) * d_bo), 0)
+    traffic += jnp.where(missL, 1 + 5, 0)                       # DRAM ld
+    traffic += jnp.where(v_valid & victim_dirty, 5, 0)          # DRAM st
+    traffic += jnp.where(vo_flush, (1 + 6) * d_bvo, 0)
+    traffic += jnp.where(v1_to_llc, 6 * d_ibv1, 0)
+    traffic += jnp.where(v1_to_dram, 6 * d_ibv1 + 5, 0)
+    msgs = (jnp.where(needs_llc, 2, 0) + jnp.where(o_act, 2, 0)
+            + jnp.where(missL, 2, 0) + jnp.where(vo_flush, 2, 0)
+            + jnp.where(v1_excl, 1, 0) + jnp.where(v_valid & victim_dirty, 1, 0))
+
+    # ---- timestamp-compression accounting ----------------------------------
+    use_comp = cfg["ts_bits"] > 0
+    thr = jnp.int32(1) << jnp.minimum(cfg["ts_bits"], 30)
+    maxts_l1 = st["maxts_l1"].at[i].max(
+        jnp.where(sel, jnp.maximum(f_wts, f_rts), 0))
+    maxts_llc = st["maxts_llc"].at[bank].max(
+        jnp.where(upd, jnp.maximum(g_wts, new_llc_rts), 0))
+    reb1 = use_comp & sel & ((maxts_l1[i] - st["bts_l1"][i]) >= thr)
+    reb2 = use_comp & upd & ((maxts_llc[bank] - st["bts_llc"][bank]) >= thr)
+    half = thr // 2
+    new_bts1 = st["bts_l1"][i] + half
+    bts_l1 = st["bts_l1"].at[i].set(jnp.where(reb1, new_bts1, st["bts_l1"][i]))
+    bts_llc = st["bts_llc"].at[bank].set(
+        jnp.where(reb2, st["bts_llc"][bank] + half, st["bts_llc"][bank]))
+    # invalidate long-expired private Shared lines (delta would go negative)
+    kill = (reb1 & (l1_st_a[i] == P.SHARED) & (l1_rts_a[i] < new_bts1))
+    l1_st_a = l1_st_a.at[i].set(jnp.where(kill, P.INVALID, l1_st_a[i]))
+    lat = lat + jnp.where(reb1, cfg["rebase_l1"], 0) \
+              + jnp.where(reb2, cfg["rebase_l2"], 0)
+
+    stats = _bump(
+        st["stats"],
+        traffic=jnp.where(active, traffic, 0),
+        msgs=jnp.where(active, msgs, 0),
+        n_renew=renewal, n_renew_ok=renew_ok,
+        n_misspec=renewal & ~renew_ok & (spec == 1),
+        n_upgrade_ok=upgrade_ok,
+        n_llc_req=needs_llc, n_dram=missL,
+        n_ts_incr=jnp.where(active, new_pts - pts, 0),
+        n_rebase_l1=reb1, n_rebase_l2=reb2,
+        n_rebase_inval=jnp.where(reb1, jnp.sum(kill), 0),
+        n_l1_miss=needs_llc & ~renewal,
+        n_egrant=grant_e,
+    )
+
+    new_st = dict(st, l1_tag=l1_tag, l1_st=l1_st_a, l1_wts=l1_wts,
+                  l1_rts=l1_rts_a, l1_ver=l1_ver, l1_dirty=l1_dirty,
+                  l1_lru=l1_lru, llc_tag=llc_tag, llc_st=llc_st,
+                  llc_wts=llc_wts, llc_rts=llc_rts, llc_owner=llc_owner,
+                  llc_ver=llc_ver, llc_dirty=llc_dirty, llc_lru=llc_lru,
+                  llc_acc=llc_acc, mem_ver=mem_ver, mts=mts,
+                  store_count=store_count, bts_l1=bts_l1, bts_llc=bts_llc,
+                  maxts_l1=maxts_l1, maxts_llc=maxts_llc, stats=stats)
+    new_st["pts"] = st["pts"].at[i].set(new_pts)
+    return new_st, lat, op_ts, ver_obs
+
+
+# ---------------------------------------------------------------------------
+# Scheduler harness: min-clock interleaving, barriers, spins, self-increment
+# ---------------------------------------------------------------------------
+
+def _make_step(geom: Geometry, mem_fn):
+    trace_last = geom.trace_len - 1
+
+    def step(st):
+        cfg = st["cfg"]
+        runnable = ~st["done"] & ~st["blocked"]
+        none_runnable = ~runnable.any()
+        i = jnp.argmin(jnp.where(runnable, st["clock"], INT_MAX))
+        j = jnp.clip(st["idx"][i], 0, trace_last)
+        ty = st["op_type"][i, j]
+        addr = jnp.clip(st["op_addr"][i, j], 0, geom.n_addr - 1)
+        aux = st["op_aux"][i, j]
+        think = st["op_think"][i, j]
+
+        is_end = (ty == END) | none_runnable
+        is_barrier = (ty == BARRIER) & ~none_runnable
+        is_spin = (ty == SPIN) & ~none_runnable
+        is_store = (ty == STORE) & ~none_runnable
+        is_mem = ((ty == LOAD) | is_store | is_spin) & ~none_runnable
+
+        st = dict(st, lru_clock=st["lru_clock"] + 1)
+        st2, lat, op_ts, ver_obs = mem_fn(geom, st, i, addr, is_store, is_mem)
+
+        # ---- spin resolution with exponential poll backoff ----------------
+        spin_ok = ver_obs >= aux
+        spin_fail = is_spin & ~spin_ok
+        backoff = jnp.minimum(
+            cfg["backoff_cap"],
+            jnp.int32(1) << jnp.minimum(st["spin_iter"][i], 8))
+        spin_iter = st["spin_iter"].at[i].set(
+            jnp.where(spin_fail, st["spin_iter"][i] + 1, 0))
+
+        # ---- self-increment (livelock avoidance, paper III-E) -------------
+        # A backed-off poll stands in for `backoff` single-cycle polls that
+        # real hardware would have issued, so credit the access counter
+        # accordingly (keeps the self-increment *rate per cycle* faithful).
+        credit = jnp.where(is_mem, 1, 0) + jnp.where(spin_fail, backoff, 0)
+        acc1 = st2["acc"][i] + credit
+        n_inc = acc1 // jnp.maximum(cfg["period"], 1)
+        selfinc = is_mem & (n_inc > 0)
+        acc = st2["acc"].at[i].set(
+            jnp.where(selfinc, acc1 % jnp.maximum(cfg["period"], 1), acc1))
+        pts = st2["pts"].at[i].add(jnp.where(selfinc, n_inc, 0))
+
+        # ---- clock / idx advance -------------------------------------------
+        new_clock_i = (st["clock"][i] + think
+                       + jnp.where(is_mem, lat, 0)
+                       + jnp.where(spin_fail, backoff, 0))
+        clock = st2["clock"].at[i].set(new_clock_i)
+        advance = (is_mem & ~spin_fail) | is_end
+        idx = st2["idx"].at[i].add(jnp.where(advance & ~none_runnable, 1, 0))
+        done = st2["done"].at[i].set(st2["done"][i] | (is_end & ~none_runnable))
+        done = jnp.where(none_runnable, jnp.ones_like(done), done)
+
+        # ---- barrier ---------------------------------------------------------
+        arrived = st2["arrived"].at[i].set(st2["arrived"][i] | is_barrier)
+        blocked = st2["blocked"].at[i].set(st2["blocked"][i] | is_barrier)
+        all_arr = jnp.all(arrived | done)
+        release = is_barrier & all_arr
+        rel_clock = jnp.max(jnp.where(arrived, clock, 0)) + cfg["barrier_cost"]
+        clock = jnp.where(release & arrived, rel_clock, clock)
+        idx = jnp.where(release & arrived, idx + 1, idx)
+        blocked = jnp.where(release, jnp.zeros_like(blocked), blocked)
+        arrived = jnp.where(release, jnp.zeros_like(arrived), arrived)
+
+        stats = _bump(st2["stats"],
+                      ops_done=advance & is_mem,
+                      n_selfinc=jnp.where(selfinc, n_inc, 0),
+                      n_ts_incr=jnp.where(selfinc, n_inc, 0),
+                      n_spin_polls=is_spin)
+        out = dict(st2, clock=clock, pts=pts, idx=idx, done=done,
+                   blocked=blocked, arrived=arrived, acc=acc,
+                   spin_iter=spin_iter, stats=stats,
+                   steps=st["steps"] + 1,
+                   aborted=st["aborted"] | none_runnable)
+
+        if geom.log_size:
+            log = st2["log"]
+            n = log["n"]
+            w = jnp.clip(n, 0, geom.log_size - 1)
+            ok = is_mem & (n < geom.log_size)
+            upd = lambda a, v: a.at[w].set(jnp.where(ok, v, a[w]))
+            out["log"] = {
+                "core": upd(log["core"], i),
+                "kind": upd(log["kind"], jnp.where(is_store, 1, 0)),
+                "addr": upd(log["addr"], addr),
+                "ts": upd(log["ts"], op_ts),
+                "ver": upd(log["ver"], ver_obs),
+                "n": n + jnp.where(ok, 1, 0),
+            }
+        return out
+
+    return step
+
+
+_RUNNERS = {}
+
+
+def _get_runner(geom: Geometry, proto: str):
+    key = (geom, proto)
+    if key not in _RUNNERS:
+        if proto == "tardis":
+            mem_fn = tardis_mem
+        elif proto == "directory":
+            from .directory import directory_mem
+            mem_fn = directory_mem
+        else:
+            raise ValueError(f"unknown protocol {proto!r}")
+        step = _make_step(geom, mem_fn)
+
+        def run(st0):
+            def cond(st):
+                return (~jnp.all(st["done"])) & (st["steps"] < st["cfg"]["max_steps"])
+            return jax.lax.while_loop(cond, step, st0)
+
+        _RUNNERS[key] = jax.jit(run)
+    return _RUNNERS[key]
+
+
+@dataclasses.dataclass
+class SimResult:
+    stats: Dict[str, float]
+    cycles: int
+    ops: int
+    aborted: bool
+    pts: np.ndarray
+    log: Dict[str, np.ndarray] | None
+
+    @property
+    def throughput(self) -> float:
+        return self.ops / max(1, self.cycles)
+
+    @property
+    def traffic(self) -> float:
+        return self.stats["traffic"]
+
+
+def simulate(trace: Trace, proto: str = "tardis",
+             config: SimConfig | None = None,
+             geom: Geometry | None = None,
+             log: bool = False) -> SimResult:
+    """Run one trace under one protocol; returns stats (+ optional op log)."""
+    config = config or SimConfig()
+    if geom is None:
+        geom = Geometry(n_cores=trace.n_cores)
+    log_size = 0
+    if log:
+        # spin polls can multiply the op count; leave generous headroom
+        log_size = int(min(config.max_steps, trace.total_ops() * 8 + 4096))
+    geom = dataclasses.replace(
+        geom, n_cores=trace.n_cores, trace_len=trace.length,
+        n_addr=max(geom.n_addr, int(trace.n_addr)), log_size=log_size)
+    cfg = config.as_jnp()
+    st0 = init_state(geom, trace, cfg, directory=(proto == "directory"))
+    out = _get_runner(geom, proto)(st0)
+    out = jax.device_get(out)
+    stats = {k: float(v) for k, v in out["stats"].items()}
+    active = np.asarray(out["idx"]) > 0
+    cycles = int(np.max(np.where(active, np.asarray(out["clock"]), 0)))
+    res_log = None
+    if log:
+        n = int(out["log"]["n"])
+        res_log = {k: np.asarray(v[:n]) for k, v in out["log"].items()
+                   if k != "n"}
+    return SimResult(stats=stats, cycles=cycles,
+                     ops=int(stats["ops_done"]), aborted=bool(out["aborted"]),
+                     pts=np.asarray(out["pts"]), log=res_log)

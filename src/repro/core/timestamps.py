@@ -1,0 +1,115 @@
+"""Base-delta timestamp compression (paper section IV-B).
+
+On-chip, Tardis stores per-line timestamps as short deltas against a per-cache
+64-bit base timestamp (``bts``).  When any delta would overflow the configured
+width the cache *rebases*: ``bts += 2**(bits-1)`` and every delta shrinks by
+the same amount.  Deltas that would go negative are clamped:
+
+  * LLC Shared lines / private Exclusive lines: wts and rts may be safely
+    *increased* to the new base (a hypothetical later write of the same value /
+    later read -- neither violates SC),
+  * private Shared lines whose rts would go negative must be invalidated
+    (rts cannot grow without the timestamp manager's consent).
+
+This module implements the compressed view functionally: callers keep
+*absolute* int32 timestamps (the simulator's source of truth) plus a per-cache
+``bts``; :func:`rebase_needed` and :func:`apply_rebase` express the hardware
+events so the simulator can charge the rebase cost and perform the clamping /
+invalidation side effects.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import protocol
+
+
+def delta(ts, bts):
+    """Compressed representation of an absolute timestamp."""
+    return ts - bts
+
+
+def rebase_needed(max_ts, bts, bits):
+    """True when the largest timestamp in the cache no longer fits ``bits``."""
+    return (max_ts - bts) >= (1 << bits)
+
+
+def rebase_amount(bits):
+    """The paper rebases by half of the maximum delta."""
+    return 1 << (bits - 1)
+
+
+def apply_rebase(bts, wts, rts, state, is_private, bits):
+    """Apply one rebase step to a cache's timestamp arrays.
+
+    Args:
+      bts: scalar base timestamp of this cache.
+      wts, rts: absolute timestamp arrays for every line.
+      state: per-line state (protocol.INVALID/SHARED/EXCLUSIVE).
+      is_private: python bool -- private cache (True) or LLC (False).
+      bits: delta width.
+
+    Returns (new_bts, new_wts, new_rts, new_state, invalidated_count).
+    Absolute timestamps only *increase* (clamped to the new base); private
+    Shared lines whose rts falls below the new base are invalidated.
+    """
+    new_bts = bts + rebase_amount(bits)
+    valid = state != protocol.INVALID
+    wts_low = valid & (wts < new_bts)
+    rts_low = valid & (rts < new_bts)
+
+    if is_private:
+        # Shared lines cannot raise rts unilaterally -> invalidate them.
+        kill = rts_low & (state == protocol.SHARED)
+        new_state = jnp.where(kill, protocol.INVALID, state)
+        new_wts = jnp.where(wts_low & ~kill, new_bts, wts)
+        new_rts = jnp.where(rts_low & ~kill, new_bts, rts)
+        return new_bts, new_wts, new_rts, new_state, jnp.sum(kill)
+    # LLC: Shared lines may raise both; Exclusive LLC entries hold no
+    # timestamps (owner has them) so leave untouched.
+    sh = state == protocol.SHARED
+    new_wts = jnp.where(wts_low & sh, new_bts, wts)
+    new_rts = jnp.where(rts_low & sh, new_bts, rts)
+    return new_bts, new_wts, new_rts, state, jnp.zeros((), jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bits", "is_private"))
+def maybe_rebase(bts, wts, rts, state, *, bits, is_private):
+    """Jitted convenience wrapper: rebase iff needed.
+
+    Returns (bts, wts, rts, state, rebased?, invalidated).
+    """
+    valid = state != protocol.INVALID
+    max_ts = jnp.max(jnp.where(valid, jnp.maximum(wts, rts), 0))
+    need = rebase_needed(max_ts, bts, bits)
+
+    def do(_):
+        return apply_rebase(bts, wts, rts, state, is_private, bits)
+
+    def skip(_):
+        return bts, wts, rts, state, jnp.zeros((), jnp.int32)
+
+    nb, nw, nr, ns, killed = jax.lax.cond(need, do, skip, operand=None)
+    return nb, nw, nr, ns, need, killed
+
+
+def storage_bits_per_line(n_cores: int, scheme: str, delta_bits: int = 20,
+                          ackwise_ptrs: int = 4) -> int:
+    """Per-LLC-line metadata cost (paper Table VII).
+
+    full-map MSI: one sharer bit per core.  Ackwise: k pointers of log2(N)
+    bits each.  Tardis: two delta timestamps (owner id reuses the same bits
+    when the line is Exclusive, so no extra cost).
+    """
+    import math
+    logn = max(1, math.ceil(math.log2(n_cores)))
+    if scheme == "full-map":
+        return n_cores
+    if scheme == "ackwise":
+        return ackwise_ptrs * logn
+    if scheme == "tardis":
+        return 2 * delta_bits
+    raise ValueError(f"unknown scheme {scheme!r}")

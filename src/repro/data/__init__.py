@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, shard_batch, synthetic_batch
+
+__all__ = ["Prefetcher", "shard_batch", "synthetic_batch"]

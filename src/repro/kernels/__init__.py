@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each subpackage is kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle):
+  flash_attention, decode_attention, ssd_scan, rmsnorm, tardis_lease.
+All are validated in interpret mode against their oracles by
+tests/test_kernels_*.py with shape/dtype sweeps.
+"""

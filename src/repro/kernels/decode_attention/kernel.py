@@ -1,0 +1,84 @@
+"""Flash-decode Pallas kernel: one query token vs. a long KV cache.
+
+Grid: (batch * kv_heads, num_kv_blocks) -- the kv dimension is sequential,
+with the GQA group's (m, l, acc) accumulators in VMEM scratch (split-S
+partial softmax).  ``kv_len`` is a *dynamic* scalar (continuous batching!)
+delivered through scalar prefetch so block masking needs no recompilation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, block_k: int, num_kv: int):
+    ik = pl.program_id(1)
+    kv_len = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (g, dh)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (g, bk)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(m_new <= NEG_INF, 0.0, jnp.exp(s - m_new))
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == num_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_grouped(q, k, v, kv_len, *, scale: float,
+                             block_k: int = 512, interpret: bool = False):
+    """q: (B*Hkv, G, Dh); k, v: (B*Hkv, T, Dh); kv_len: () int32."""
+    bh, g, dh = q.shape
+    _, t, _ = k.shape
+    block_k = min(block_k, t)
+    assert t % block_k == 0
+    num_kv = t // block_k
+    grid = (bh, num_kv)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                          num_kv=num_kv),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, g, dh), lambda bh_, ik, _s: (bh_, 0, 0)),
+                pl.BlockSpec((1, block_k, dh),
+                             lambda bh_, ik, _s: (bh_, ik, 0)),
+                pl.BlockSpec((1, block_k, dh),
+                             lambda bh_, ik, _s: (bh_, ik, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, g, dh),
+                                   lambda bh_, ik, _s: (bh_, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, dh), jnp.float32),
+            ]),
+        out_shape=jax.ShapeDtypeStruct((bh, g, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,30 @@
+"""Public wrapper: (B, 1, H, Dh) query + (B, T, Hkv, Dh) caches."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_grouped
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
+                     interpret: bool = False):
+    b, one, h, dh = q.shape
+    _, t, hkv, _ = k_cache.shape
+    g = h // hkv
+    scale = dh ** -0.5
+    pad = (-dh) % 128
+    if pad:
+        padw = [(0, 0)] * 3 + [(0, pad)]
+        q, k_cache, v_cache = (jnp.pad(a, padw) for a in (q, k_cache, v_cache))
+    qg = q.reshape(b, h, -1).reshape(b, hkv, g, q.shape[-1]) \
+        .reshape(b * hkv, g, q.shape[-1])
+    kt = k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, t, k_cache.shape[-1])
+    vt = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, t, v_cache.shape[-1])
+    out = decode_attention_grouped(qg, kt, vt, kv_len, scale=scale,
+                                   block_k=block_k, interpret=interpret)
+    out = out.reshape(b, hkv, g, -1).reshape(b, h, -1)[..., :dh]
+    return out[:, None].reshape(b, 1, h, dh)

@@ -1,0 +1,7 @@
+"""Oracle: naive attention over the valid cache prefix."""
+from ...models.attention import reference_attention
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len):
+    return reference_attention(q, k_cache, v_cache, causal=False,
+                               kv_len=kv_len)

@@ -1,0 +1,107 @@
+"""Causal GQA flash-attention forward, Pallas TPU.
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks) with the kv dimension
+innermost/sequential; running (m, l, acc) live in VMEM scratch across kv
+steps (the canonical TPU flash schedule).  Blocks are MXU-aligned:
+block_q x head_dim and block_k x head_dim tiles with head_dim padded to a
+multiple of 128 by ops.py (zero-padding is exact for both QK^T and AV).
+
+GQA is expressed in the k/v index_map: query head h reads kv head h // group
+-- no materialized kv replication in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  q_offset: int, kv_len: int, num_kv: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    qpos = q_offset + pl.program_id(1) * block_q + \
+        jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ik * block_k + \
+        jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= qpos >= kpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    # fully-masked-so-far rows: keep p = 0 (avoid exp(-inf + inf) = 1)
+    p = jnp.where(m_new <= NEG_INF, 0.0, jnp.exp(s - m_new))
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())))
+
+    @pl.when(ik == num_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                         kv_len: int | None = None, scale: float | None = None,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False):
+    """q: (B, H, Sq, Dh); k, v: (B, Hkv, Skv, Dh).  Dh % 128 == 0."""
+    b, h, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    g = h // hkv
+    scale = dh ** -0.5 if scale is None else scale
+    kv_len = skv if kv_len is None else kv_len
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0
+    grid = (b * h, sq // block_q, skv // block_k)
+
+    qs = q.reshape(b * h, sq, dh)
+    ks = k.reshape(b * hkv, skv, dh)
+    vs = v.reshape(b * hkv, skv, dh)
+
+    def kv_index(bh, iq, ik):
+        return ((bh // h) * hkv + (bh % h) // g, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+            causal=causal, q_offset=q_offset, kv_len=kv_len,
+            num_kv=skv // block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, dh), kv_index),
+            pl.BlockSpec((1, block_k, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),     # running denom
+            pltpu.VMEM((block_q, dh), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+    return out.reshape(b, h, sq, dh)

@@ -1,0 +1,38 @@
+"""Public wrapper: (B, S, H, Dh) layout + head-dim padding + GQA handling."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _pad_dh(x, mult=128):
+    dh = x.shape[-1]
+    pad = (-dh) % mult
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, dh
+
+
+@partial(jax.jit, static_argnames=("causal", "q_offset", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    kv_len=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh) -> (B, Sq, H, Dh)."""
+    dh_orig = q.shape[-1]
+    scale = dh_orig ** -0.5
+    q, _ = _pad_dh(q)
+    k, _ = _pad_dh(k)
+    v, _ = _pad_dh(v)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    kv_len_c = kt.shape[2] if kv_len is None else kv_len
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, q_offset=q_offset, kv_len=kv_len_c,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)[..., :dh_orig]

@@ -1,0 +1,7 @@
+"""Oracle: naive masked softmax attention (same as models.attention ref)."""
+from ...models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, q_offset=0, kv_len=None):
+    return reference_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_len=kv_len)

@@ -1,0 +1,23 @@
+"""Jitted public wrapper for the RMSNorm kernel (any leading batch dims)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import rmsnorm_2d
+
+
+@partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, w, eps: float = 1e-5, interpret: bool = False):
+    shape = x.shape
+    r = 1
+    for s in shape[:-1]:
+        r *= s
+    x2 = x.reshape(r, shape[-1])
+    block = 8
+    while r % block:
+        block //= 2
+    out = rmsnorm_2d(x2, w, eps=eps, block_rows=max(1, block),
+                     interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,62 @@
+"""Intra-chunk SSD (Mamba2) Pallas kernel.
+
+Computes, per (batch, chunk, head) grid point, the chunk-local quadratic
+term and the chunk's boundary-state contribution:
+
+  y_intra[i] = sum_{j<=i} (C_i . B_j) * exp(cum_i - cum_j) * xdt_j
+  S_chunk    = sum_j B_j^T (exp(cum_last - cum_j) * xdt_j)
+
+Both are MXU matmuls over (Q x N)/(Q x P) tiles held in VMEM; the decay
+matrix L is built in-register from the cumulative log-decay vector.  The
+sequential inter-chunk recurrence (tiny (H,P,N) state updates) stays in jnp
+inside ops.py -- the quadratic work is the hot spot, matching how the paper's
+SSD algorithm maps onto tensor cores (here: the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(c_ref, b_ref, x_ref, cum_ref, y_ref, s_ref):
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)  (already * dt)
+    cum = cum_ref[0].astype(jnp.float32)      # (Q, 1)
+
+    q = c.shape[0]
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))      # (Q, Q)
+    seg = cum - cum.reshape(1, q)                                 # cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    y_ref[0] = jax.lax.dot_general(
+        cb * L, x, (((1,), (0,)), ((), ()))).astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cum[-1] - cum)                            # (Q, 1)
+    s_ref[0] = jax.lax.dot_general(
+        b, x * decay_end, (((0,), (0,)), ((), ()))).astype(s_ref.dtype)
+
+
+def ssd_intra_chunk(C, B, xdt, cum, *, interpret: bool = False):
+    """C, B: (G, Q, N); xdt: (G, Q, P); cum: (G, Q, 1).
+
+    G folds (batch, chunk, head).  Returns (y_intra (G, Q, P),
+    S_chunk (G, N, P)) in fp32.
+    """
+    g, q, n = C.shape
+    p = xdt.shape[-1]
+    grid = (g,)
+    spec = lambda *shape: pl.BlockSpec((1,) + shape, lambda i: (i,) + (0,) * len(shape))
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[spec(q, n), spec(q, n), spec(q, p), spec(q, 1)],
+        out_specs=[spec(q, p), spec(n, p)],
+        out_shape=[jax.ShapeDtypeStruct((g, q, p), jnp.float32),
+                   jax.ShapeDtypeStruct((g, n, p), jnp.float32)],
+        interpret=interpret,
+    )(C, B, xdt, cum)

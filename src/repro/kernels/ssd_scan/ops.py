@@ -1,0 +1,62 @@
+"""Full SSD scan: Pallas intra-chunk kernel + jnp inter-chunk recurrence."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_intra_chunk
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = False):
+    """Same contract as models.ssm.ssd_chunked (the oracle)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    da = dtc * A
+    cum = jnp.cumsum(da, axis=2)                                  # (b,nc,q,h)
+    xdt = x.reshape(b, nc, chunk, h, p).astype(jnp.float32) * dtc[..., None]
+
+    # fold (b, nc, h) into the kernel grid; B/C broadcast over heads
+    Bc = jnp.broadcast_to(B.reshape(b, nc, chunk, 1, n),
+                          (b, nc, chunk, h, n))
+    Cc = jnp.broadcast_to(C.reshape(b, nc, chunk, 1, n),
+                          (b, nc, chunk, h, n))
+    fold = lambda a: a.transpose(0, 1, 3, 2, 4).reshape(b * nc * h,
+                                                        chunk, a.shape[-1])
+    y_i, S = ssd_intra_chunk(
+        fold(Cc), fold(Bc), fold(xdt[..., :, :]),
+        cum.transpose(0, 1, 3, 2).reshape(b * nc * h, chunk, 1),
+        interpret=interpret)
+    y_i = y_i.reshape(b, nc, h, chunk, p).transpose(0, 1, 3, 2, 4)
+    S = S.reshape(b, nc, h, n, p).transpose(0, 1, 2, 4, 3)        # (b,nc,h,p,n)
+
+    # inter-chunk recurrence (sequential, tiny)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        s_chunk, dec = inp
+        out = carry * dec[:, :, None, None] + s_chunk
+        return out, carry
+
+    final, s_prev = jax.lax.scan(
+        scan_fn, jnp.zeros((b, h, p, n), jnp.float32),
+        (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)                      # (b,nc,h,p,n)
+
+    decay_from_start = jnp.exp(cum)                               # (b,nc,q,h)
+    y_x = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                     C.reshape(b, nc, chunk, n).astype(jnp.float32),
+                     decay_from_start, s_prev)
+    y = (y_i + y_x).reshape(b, nc * chunk, h, p)[:, :s]
+    y = y + x[:, :s].astype(jnp.float32) * D[:, None]
+    return y, final

@@ -1,0 +1,6 @@
+"""Oracle: the pure-jnp chunked SSD from the model zoo."""
+from ...models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, A, B, C, D, *, chunk: int = 64):
+    return ssd_chunked(x, dt, A, B, C, D, chunk)

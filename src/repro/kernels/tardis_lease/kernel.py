@@ -1,0 +1,70 @@
+"""Batched Tardis timestamp-manager rules as a Pallas TPU kernel.
+
+The TPU has no per-cacheline FSM, so the protocol's hot metadata path -- a
+timestamp manager serving thousands of lease checks / renewals / write
+jump-aheads against a block table -- becomes a lane-vectorized array program
+(DESIGN.md section 2.3).  One kernel pass over a (rows, 128) block table
+evaluates, per block:
+
+  * expired     = pts > rts                      (Table II, shared line check)
+  * renew_ok    = req_wts == wts                 (data-less RENEW_REP)
+  * new_rts     = max(rts, wts + lease, pts + lease)   (Table III, SH_REQ)
+  * row max of rts                               (writer jump-ahead reduce)
+
+pts/lease arrive via scalar prefetch so a serving engine can stream tables
+through the same compiled kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _lease_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref,
+                  new_rts_ref, flags_ref, rowmax_ref):
+    pts = scalars_ref[0]
+    lease = scalars_ref[1]
+    wts = wts_ref[...]
+    rts = rts_ref[...]
+    req = reqwts_ref[...]
+
+    expired = (pts > rts).astype(jnp.int32)
+    renew_ok = (req == wts).astype(jnp.int32)
+    new_rts = jnp.maximum(jnp.maximum(rts, wts + lease), pts + lease)
+
+    new_rts_ref[...] = new_rts
+    flags_ref[...] = renew_ok | (expired << 1)
+    rowmax_ref[...] = jnp.max(rts, axis=1, keepdims=True)
+
+
+def lease_table(wts, rts, req_wts, pts, lease, *, block_rows: int = 8,
+                interpret: bool = False):
+    """wts/rts/req_wts: (R, 128) int32; pts, lease: scalars.
+
+    Returns (new_rts (R,128), flags (R,128), row_max (R,1)).
+    """
+    r, lanes = wts.shape
+    assert lanes == LANES, lanes
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0
+    grid = (r // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i, _s: (i, 0))
+    scalars = jnp.stack([jnp.asarray(pts, jnp.int32),
+                         jnp.asarray(lease, jnp.int32)])
+    return pl.pallas_call(
+        _lease_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec, spec, spec],
+            out_specs=[spec, spec,
+                       pl.BlockSpec((block_rows, 1), lambda i, _s: (i, 0))]),
+        out_shape=[jax.ShapeDtypeStruct((r, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((r, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((r, 1), jnp.int32)],
+        interpret=interpret,
+    )(scalars, wts, rts, req_wts)

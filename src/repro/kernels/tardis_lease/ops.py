@@ -1,0 +1,36 @@
+"""Public wrapper: flat block tables of any size + writer jump-ahead."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import LANES, lease_table
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def lease_check(wts, rts, req_wts, pts, lease, interpret: bool = False):
+    """wts/rts/req_wts: flat (N,) int32 block tables.
+
+    Returns dict with per-block new_rts / expired / renew_ok and the
+    writer's jump-ahead timestamp max(rts)+1 over the whole table.
+    """
+    n = wts.shape[0]
+    pad = (-n) % LANES
+    wts2 = jnp.pad(wts, (0, pad)).reshape(-1, LANES)
+    rts2 = jnp.pad(rts, (0, pad), constant_values=-1).reshape(-1, LANES)
+    req2 = jnp.pad(req_wts, (0, pad)).reshape(-1, LANES)
+    rows = wts2.shape[0]
+    block = 8
+    while rows % block:
+        block //= 2
+    new_rts, flags, rowmax = lease_table(
+        wts2, rts2, req2, pts, lease, block_rows=max(1, block),
+        interpret=interpret)
+    return {
+        "new_rts": new_rts.reshape(-1)[:n],
+        "renew_ok": (flags.reshape(-1)[:n] & 1).astype(bool),
+        "expired": ((flags.reshape(-1)[:n] >> 1) & 1).astype(bool),
+        "write_ts": jnp.max(rowmax) + 1,
+    }

@@ -1,0 +1,14 @@
+"""Oracle: the same rules straight from repro.core.protocol."""
+import jax.numpy as jnp
+
+from ...core import protocol as P
+
+
+def lease_check_ref(wts, rts, req_wts, pts, lease):
+    new_rts = P.lease_extend(wts, rts, pts, lease)
+    return {
+        "new_rts": new_rts,
+        "renew_ok": P.renewable(req_wts, wts),
+        "expired": P.shared_expired(pts, rts),
+        "write_ts": jnp.max(rts) + 1,
+    }

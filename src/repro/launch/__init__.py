@@ -1,0 +1,2 @@
+# NOTE: deliberately import-free -- repro.launch.dryrun must set XLA_FLAGS
+# before jax is imported anywhere in the process.

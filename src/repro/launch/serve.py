@@ -1,0 +1,47 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Starts a Tardis-coherent replica cluster on the selected architecture's
+reduced config and serves synthetic batched requests (the full configs are
+exercised by the multi-pod dry-run; see repro.launch.dryrun).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get_arch, reduced
+from ..models import init_params
+from ..runtime import Request, ServingCluster
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--lease", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced(get_arch(args.arch))
+    if cfg.family == "encdec":
+        raise SystemExit("serve CLI drives decoder-only archs; whisper is "
+                         "exercised via tests/dry-run (needs frame inputs)")
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    cluster = ServingCluster(cfg, lambda: params, n_replicas=args.replicas,
+                             lease=args.lease, cache_len=96,
+                             selfinc_period=4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(1, cfg.vocab, rng.integers(4, 16))
+                    .astype(np.int32), max_new=args.max_new)
+            for i in range(args.requests)]
+    done, report = cluster.run(reqs)
+    print(f"served {len(done)} requests on {args.replicas} replicas "
+          f"({args.arch} reduced)")
+    for k, v in report.items():
+        print(f"  {k:28s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""GQA attention: blocked-flash training/prefill path + cached decode path.
+
+The train/prefill path is a pure-jnp flash attention (outer scan over query
+blocks, inner scan over KV blocks with an online softmax) so peak memory is
+O(block_q x block_k) per head instead of O(S^2) -- mandatory for the 32k
+prefill dry-run cells.  The inner body is rematerialized, so the backward
+pass recomputes scores blockwise too.  ``repro.kernels.flash_attention``
+implements the same schedule as a Pallas TPU kernel; this module is its
+numerics oracle and the default XLA path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pad_to(x, mult, axis):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0,
+                    window: int = 0, block_q: int = 512,
+                    block_k: int = 1024, kv_len=None):
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh); returns (B, Sq, H, Dh).
+
+    ``q_offset`` positions queries at kv index ``q_offset + i`` (decode /
+    chunked prefill).  ``kv_len`` masks out cache slots >= kv_len.
+    ``window > 0`` restricts attention to the last ``window`` kv positions.
+    """
+    b, sq, h, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    scale = dh ** -0.5
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    q, pq = _pad_to(q, block_q, 1)
+    k, pk = _pad_to(k, block_k, 1)
+    v, _ = _pad_to(v, block_k, 1)
+    nq, nk = q.shape[1] // block_q, k.shape[1] // block_k
+
+    qb = q.reshape(b, nq, block_q, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, nk, block_k, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, block_k, hkv, dh).transpose(1, 0, 2, 3, 4)
+    limit = jnp.asarray(kv_len if kv_len is not None else skv, jnp.int32)
+
+    def one_q_block(iq, qi):
+        qpos = q_offset + iq * block_q + jnp.arange(block_q)
+
+        @jax.checkpoint
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            ik, kj, vj = xs
+            kpos = ik * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqkgd,btkd->bqkgt", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            mask = kpos[None, :] < limit
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= kpos[None, :] > (qpos[:, None] - window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqkgt,btkd->bqkgd", p, vj.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, block_q, hkv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, block_q, hkv, g), jnp.float32)
+        a0 = jnp.zeros((b, block_q, hkv, g, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda xs: one_q_block(*xs), (jnp.arange(nq), qb))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * block_q, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, causal: bool, q_offset=0,
+                        window: int = 0, kv_len=None):
+    """Naive masked attention -- test oracle and small-shape path."""
+    b, sq, h, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum("bqkgd,btkd->bqkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len):
+    """Single-token attention over a cache: q (B, 1, H, Dh),
+    caches (B, T, Hkv, Dh), cur_len = number of valid cache slots."""
+    return reference_attention(q, k_cache, v_cache, causal=False,
+                               kv_len=cur_len)
+
+
+def attend(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+           kv_len=None, flash_threshold: int = 1024):
+    """Dispatch: naive for short sequences (smoke tests), flash otherwise."""
+    if q.shape[1] * k.shape[1] <= flash_threshold ** 2:
+        return reference_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                   window=window, kv_len=kv_len)
+    return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                           window=window, kv_len=kv_len)

@@ -1,0 +1,265 @@
+"""Serving paths: cache init, prefill, and single-token decode per family.
+
+``decode_step`` is the dry-run's ``serve_step``: one new token against a KV /
+SSM-state cache of the cell's sequence length.  Caches are stacked on a
+leading layer axis and threaded through the layer scan as scan inputs/outputs,
+so decode HLO is O(1) in depth like the forward pass.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attend
+from .layers import rmsnorm, swiglu
+from .moe import moe_apply
+from .ssm import ssm_block
+from .transformer import (Params, _embed, _head, attn_decode, attn_prefill,
+                          cross_apply, enc_kv_of, logits_fn)
+
+Cache = Dict[str, Any]
+
+
+def _attn_cache(cfg, n, b, t, dtype):
+    hk, dh = cfg.n_kv_heads, cfg.head_dim()
+    return (jnp.zeros((n, b, t, hk, dh), dtype),
+            jnp.zeros((n, b, t, hk, dh), dtype))
+
+
+def _ssm_cache(cfg, n, b, dtype):
+    h, pd, ns = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    c = cfg.d_inner + 2 * cfg.ssm_state
+    return (jnp.zeros((n, b, h, pd, ns), jnp.float32),
+            jnp.zeros((n, b, cfg.conv_width - 1, c), dtype))
+
+
+def init_cache(cfg: ArchConfig, b: int, t: int,
+               enc_len: int = 0, dtype=jnp.bfloat16) -> Cache:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        k, v = _attn_cache(cfg, cfg.n_layers, b, t, dtype)
+        return {"k": k, "v": v}
+    if fam == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        k, v = _attn_cache(cfg, n_moe, b, t, dtype)
+        out = {"k": k, "v": v}
+        if cfg.first_dense_layers:
+            dk, dv = _attn_cache(cfg, cfg.first_dense_layers, b, t, dtype)
+            out.update(dk=dk, dv=dv)
+        return out
+    if fam == "ssm":
+        s, c = _ssm_cache(cfg, cfg.n_layers, b, dtype)
+        return {"state": s, "conv": c}
+    if fam == "hybrid":
+        n_app = cfg.n_layers // cfg.attn_every
+        s, c = _ssm_cache(cfg, cfg.n_layers, b, dtype)
+        ak, av = _attn_cache(cfg, n_app, b, t, dtype)
+        return {"state": s, "conv": c, "ak": ak, "av": av}
+    if fam == "encdec":
+        k, v = _attn_cache(cfg, cfg.n_layers, b, t, dtype)
+        ck, cv = _attn_cache(cfg, cfg.n_layers, b, enc_len, dtype)
+        return {"k": k, "v": v, "ck": ck, "cv": cv}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ArchConfig, p: Params, cache: Cache, tokens,
+                cur_idx) -> Tuple[Cache, jnp.ndarray]:
+    """tokens: (B, 1) int32; cur_idx: int32 scalar (next cache slot).
+
+    Returns (new_cache, logits (B, 1, V)).
+    """
+    fam = cfg.family
+    x = jnp.take(p["embed"], tokens, axis=0)
+    b = x.shape[0]
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm", "moe"):
+        from ..dist.annotate import replicate
+
+        def body(xx, xs):
+            layer, kc, vc = xs
+            xx = replicate(xx)        # (B,1,D) is tiny: never gather weights
+            y, kc, vc = attn_decode(layer["attn"], cfg, xx, kc, vc, cur_idx)
+            xx = xx + y
+            xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+            if fam == "moe":
+                xx = xx + moe_apply(layer["moe"], cfg, xn)
+            else:
+                xx = xx + swiglu(layer["mlp"], xn)
+            return xx, (kc, vc)
+        if fam == "moe" and cfg.first_dense_layers:
+            def dbody(xx, xs):
+                layer, kc, vc = xs
+                y, kc, vc = attn_decode(layer["attn"], cfg, xx, kc, vc, cur_idx)
+                xx = xx + y
+                xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+                return xx + swiglu(layer["mlp"], xn), (kc, vc)
+            x, (dk, dv) = jax.lax.scan(
+                dbody, x, (p["dense_layers"], cache["dk"], cache["dv"]))
+            new_cache.update(dk=dk, dv=dv)
+        x, (k, v) = jax.lax.scan(body, x, (p["layers"], cache["k"], cache["v"]))
+        new_cache.update(k=k, v=v)
+
+    elif fam == "ssm":
+        def body(xx, xs):
+            layer, s, cbuf = xs
+            y, (s2, c2) = ssm_block(layer["ssm"], cfg, xx,
+                                    decode_state=(s, cbuf))
+            return xx + y, (s2, c2)
+        x, (s2, c2) = jax.lax.scan(
+            body, x, (p["layers"], cache["state"], cache["conv"]))
+        new_cache.update(state=s2, conv=c2)
+
+    elif fam == "hybrid":
+        n_app = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        states, convs, aks, avs = [], [], [], []
+
+        def body(xx, xs):
+            layer, s, cbuf = xs
+            y, (s2, c2) = ssm_block(layer["ssm"], cfg, xx,
+                                    decode_state=(s, cbuf))
+            return xx + y, (s2, c2)
+        for a in range(n_app):
+            group = jax.tree.map(lambda t_, a=a: t_[a], p["groups"])
+            sl = jax.lax.dynamic_slice_in_dim(cache["state"], a * per, per)
+            cl = jax.lax.dynamic_slice_in_dim(cache["conv"], a * per, per)
+            x, (s2, c2) = jax.lax.scan(body, x, (group, sl, cl))
+            states.append(s2)
+            convs.append(c2)
+            y, kc, vc = attn_decode(p["shared"]["attn"], cfg, x,
+                                    cache["ak"][a], cache["av"][a], cur_idx)
+            x = x + y
+            xn = rmsnorm(x, p["shared"]["mlp_norm"], cfg.norm_eps)
+            x = x + swiglu(p["shared"]["mlp"], xn)
+            aks.append(kc)
+            avs.append(vc)
+        new_cache.update(state=jnp.concatenate(states),
+                         conv=jnp.concatenate(convs),
+                         ak=jnp.stack(aks), av=jnp.stack(avs))
+
+    elif fam == "encdec":
+        def body(xx, xs):
+            layer, kc, vc, ck, cv = xs
+            y, kc, vc = attn_decode(layer["attn"], cfg, xx, kc, vc, cur_idx)
+            xx = xx + y
+            xx = xx + cross_apply(layer["cross"], cfg, xx, (ck, cv))
+            xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+            return xx + swiglu(layer["mlp"], xn), (kc, vc)
+        x, (k, v) = jax.lax.scan(
+            body, x, (p["dec_layers"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        new_cache.update(k=k, v=v)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return new_cache, logits_fn(cfg, p, x)
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full forward that also materializes the caches
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, p: Params, batch, cache_len: int,
+            dtype=jnp.bfloat16) -> Tuple[Cache, jnp.ndarray]:
+    """Processes the prompt, returns (cache, last-token logits)."""
+    fam = cfg.family
+    if fam == "encdec":
+        return _encdec_prefill(cfg, p, batch, cache_len)
+    x = _embed(cfg, p, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cache: Cache = {}
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(xx, layer):
+            y, (kc, vc) = attn_prefill(layer["attn"], cfg, xx, positions,
+                                       cache_len)
+            xx = xx + y
+            xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+            if fam == "moe":
+                xx = xx + moe_apply(layer["moe"], cfg, xn)
+            else:
+                xx = xx + swiglu(layer["mlp"], xn)
+            return xx, (kc.astype(dtype), vc.astype(dtype))
+        if fam == "moe" and cfg.first_dense_layers:
+            def dbody(xx, layer):
+                y, (kc, vc) = attn_prefill(layer["attn"], cfg, xx, positions,
+                                           cache_len)
+                xx = xx + y
+                xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+                return xx + swiglu(layer["mlp"], xn), (kc.astype(dtype),
+                                                       vc.astype(dtype))
+            x, (dk, dv) = jax.lax.scan(dbody, x, p["dense_layers"])
+            cache.update(dk=dk, dv=dv)
+        x, (k, v) = jax.lax.scan(body, x, p["layers"])
+        cache.update(k=k, v=v)
+    elif fam == "ssm":
+        def body(xx, layer):
+            y, (st, cv) = ssm_block(layer["ssm"], cfg, xx)
+            return xx + y, (st, cv.astype(dtype))
+        x, (st, cv) = jax.lax.scan(body, x, p["layers"])
+        cache.update(state=st, conv=cv)
+    elif fam == "hybrid":
+        n_app = cfg.n_layers // cfg.attn_every
+        states, convs, aks, avs = [], [], [], []
+
+        def body(xx, layer):
+            y, (st, cv) = ssm_block(layer["ssm"], cfg, xx)
+            return xx + y, (st, cv.astype(dtype))
+        for a in range(n_app):
+            group = jax.tree.map(lambda t_, a=a: t_[a], p["groups"])
+            x, (st, cv) = jax.lax.scan(body, x, group)
+            states.append(st)
+            convs.append(cv)
+            y, (kc, vc) = attn_prefill(p["shared"]["attn"], cfg, x,
+                                       positions, cache_len)
+            x = x + y
+            xn = rmsnorm(x, p["shared"]["mlp_norm"], cfg.norm_eps)
+            x = x + swiglu(p["shared"]["mlp"], xn)
+            aks.append(kc.astype(dtype))
+            avs.append(vc.astype(dtype))
+        cache.update(state=jnp.concatenate(states),
+                     conv=jnp.concatenate(convs),
+                     ak=jnp.stack(aks), av=jnp.stack(avs))
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    logits = logits_fn(cfg, p, x[:, -1:])
+    return cache, logits
+
+
+def _encdec_prefill(cfg, p, batch, cache_len, dtype=jnp.bfloat16):
+    enc = batch["frames"].astype(p["embed"].dtype)
+    b, se, _ = enc.shape
+    epos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+
+    def ebody(xx, layer):
+        from .transformer import attn_apply
+        xx = xx + attn_apply(layer["attn"], cfg, xx, epos, causal=False)
+        xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+        return xx + swiglu(layer["mlp"], xn), None
+    enc, _ = jax.lax.scan(ebody, enc, p["enc_layers"])
+
+    x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    sd = x.shape[1]
+    dpos = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32), (b, sd))
+
+    def dbody(xx, layer):
+        y, (kc, vc) = attn_prefill(layer["attn"], cfg, xx, dpos, cache_len)
+        xx = xx + y
+        ck, cv = enc_kv_of(layer["cross"], cfg, enc)
+        xx = xx + cross_apply(layer["cross"], cfg, xx, (ck, cv))
+        xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+        return xx + swiglu(layer["mlp"], xn), (
+            kc.astype(dtype), vc.astype(dtype),
+            ck.astype(dtype), cv.astype(dtype))
+    x, (k, v, ck, cv) = jax.lax.scan(dbody, x, p["dec_layers"])
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return {"k": k, "v": v, "ck": ck, "cv": cv}, logits_fn(cfg, p, x[:, -1:])

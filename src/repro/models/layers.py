@@ -1,0 +1,117 @@
+"""Shared neural building blocks (pure functions over param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer stacks carry a leading L dim
+    so the transformer scans over layers (O(1) HLO size in depth),
+  * math that is precision-sensitive (norms, softmax, loss) runs in fp32,
+  * every init function is usable under ``jax.eval_shape`` for the dry-run
+    (no host randomness at trace time).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p, x):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard RoPE + 3-section M-RoPE for the VLM backbone)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float, mrope: bool = False):
+    """x: (..., S, H, Dh); positions: (..., S) int32 or (..., S, 3) for M-RoPE.
+
+    M-RoPE splits the rotary dims into 3 sections (temporal/height/width);
+    when only text positions are given they are broadcast to all sections
+    (exactly Qwen2-VL's behaviour on pure-text inputs).
+    """
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # (Dh/2,)
+    if mrope:
+        if positions.ndim == x.ndim - 2:                   # text-only: (..., S)
+            positions = jnp.broadcast_to(
+                positions[..., None], positions.shape + (3,))
+        nf = freqs.shape[0]
+        sec = [nf - 2 * (nf // 3), nf // 3, nf // 3]
+        sel = jnp.repeat(jnp.arange(3), jnp.asarray(sec),
+                         total_repeat_length=nf)           # (Dh/2,) section id
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sel, positions.shape[:-1] + (nf,)).astype(jnp.int32),
+            axis=-1)                                       # (..., S, Dh/2)
+        angles = pos * freqs
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs
+    cos = jnp.cos(angles)[..., None, :]                    # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy: never materializes (B, S, V) logits
+# ---------------------------------------------------------------------------
+
+def chunked_xent(hidden, w_head, labels, chunk: int = 512):
+    """Mean token cross-entropy, scanned over sequence chunks.
+
+    hidden: (B, S, D); w_head: (D, V); labels: (B, S) int32 (-1 = masked).
+    The per-chunk body is rematerialized so the backward pass also never
+    holds more than one chunk of logits.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    hc = hidden[:, :n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    lc = labels[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, l = xs
+        logits = jnp.einsum("bcd,dv->bcv", h, w_head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        loss = jnp.sum((lse - gold) * mask)
+        cnt = jnp.sum(mask)
+        return (carry[0] + loss, carry[1] + cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

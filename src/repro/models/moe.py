@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+The dispatch avoids the (tokens, experts, capacity) one-hot einsum entirely:
+assignments are sorted by expert id, positions-within-expert come from a
+cumsum, and tokens scatter into an (E, C, D) buffer (overflow drops into a
+sacrificial capacity slot).  This keeps memory O(E*C*D) and lowers to
+gather/scatter + batched matmuls that GSPMD shards cleanly with experts on
+the `model` axis (EP) and capacity on the `data` axis.
+
+Supports the assigned MoE variants:
+  * kimi-k2: 384 experts top-8, 1 shared expert, first layer dense,
+  * arctic:  128 experts top-2 plus a parallel dense-residual MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, swiglu, swiglu_init
+
+
+def moe_init(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "w_gate": dense_init(ks[1], (e, d, f), dtype),
+        "w_up": dense_init(ks[2], (e, d, f), dtype),
+        "w_down": dense_init(ks[3], (e, f, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, f * cfg.n_shared_experts, dtype)
+    if cfg.residual_ff:
+        p["residual"] = swiglu_init(ks[5], d, cfg.residual_ff, dtype)
+    return p
+
+
+def _capacity(cfg, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)     # round up to 8 for lane alignment
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # --- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (t, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # --- sort-based dispatch ------------------------------------------------
+    flat_exp = expert_ids.reshape(t * k)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_exp)                              # stable
+    sorted_exp = flat_exp[order]
+    sorted_tok = flat_tok[order]
+    # position of each assignment within its expert
+    ones = jnp.ones_like(sorted_exp)
+    pos_global = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(sorted_exp, jnp.arange(e), side="left")
+    pos = pos_global - seg_start[sorted_exp]
+    cap = _capacity(cfg, t)
+    slot = jnp.minimum(pos, cap)                               # cap = overflow bin
+    buf = jnp.zeros((e, cap + 1, d), x.dtype)
+    buf = buf.at[sorted_exp, slot].set(xf[sorted_tok], mode="drop")
+    buf = buf[:, :cap]                                         # drop overflow
+
+    # --- expert computation (batched over experts) --------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    # --- combine -------------------------------------------------------------
+    kept = pos < cap
+    gathered = y[sorted_exp, jnp.minimum(pos, cap - 1)]        # (t*k, d)
+    gathered = jnp.where(kept[:, None], gathered, 0)
+    contrib = jnp.zeros((t * k, d), x.dtype).at[order].set(gathered)
+    contrib = contrib.reshape(t, k, d)
+    out = jnp.einsum("tkd,tk->td", contrib.astype(jnp.float32),
+                     gate_vals).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        out = out + swiglu(p["shared"], xf)
+    if cfg.residual_ff:
+        out = out + swiglu(p["residual"], xf)
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(p, cfg, x):
+    """Switch-style load-balance auxiliary loss (fraction * prob per expert)."""
+    b, s, d = x.shape
+    t = b * s
+    logits = jnp.einsum("td,de->te", x.reshape(t, d).astype(jnp.float32),
+                        p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, ids = jax.lax.top_k(probs, cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(ids, cfg.n_experts, dtype=jnp.float32),
+                    axis=(0, 1))
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,161 @@
+"""Mamba2 / SSD (state-space duality) layer, chunked (arXiv:2405.21060).
+
+Training/prefill uses the SSD chunked algorithm: within-chunk attention-like
+quadratic term + inter-chunk state recurrence over chunk boundaries, all as
+batched matmuls (MXU-friendly).  Decode keeps an (H, P, N) state plus a
+short conv buffer and costs O(1) per token in sequence length -- this is why
+mamba2/zamba2 are the archs that run the long_500k cell.
+
+``repro.kernels.ssd_scan`` implements the chunk scan as a Pallas kernel;
+:func:`ssd_chunked` is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm
+
+
+def ssm_init(key, cfg, dtype):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 5)
+    return {
+        # fused input projection -> [x(di), z(di), B(n), C(n), dt(h)]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype),
+        "conv_w": dense_init(ks[1], (cw, di + 2 * n), dtype, scale=cw ** -0.5),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_proj": dense_init(ks[2], (di, d), dtype),
+        "norm_w": jnp.ones((di,), jnp.float32).astype(dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    x = proj[..., :di]
+    z = proj[..., di:2 * di]
+    bc = proj[..., 2 * di:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return x, z, bc, dt
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv: u (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):      # K is tiny (4); unrolled taps stay fusable
+        out = out + up[:, i:i + u.shape[1]] * w[i]
+    return out
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """SSD chunk scan.
+
+    x: (b, s, h, p); dt: (b, s, h) (softplus-ed); A: (h,) negative;
+    B, C: (b, s, n); D: (h,).  Returns (y, final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    da = dtc * A                                   # (b, nc, q, h), negative
+    cum = jnp.cumsum(da, axis=2)                   # within-chunk log-decay
+    # decay from step j (exclusive) to step i within a chunk:
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # (b,nc,q,h,p)
+    # intra-chunk (the "attention-like" quadratic term)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)     # (b,nc,i,j)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, L, xdt)
+
+    # chunk-boundary states: S_c = sum_j decay(end..j) B_j (x dt)_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,nc,q,h)
+    S = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, decay_to_end, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        s_in, (s_chunk, dec) = carry, inp
+        s_out = s_in * dec[:, :, None, None] + s_chunk
+        return s_out, s_in                                   # emit pre-state
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, s_prev = jax.lax.scan(
+        scan_fn, s0, (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)                 # (b,nc,h,p,n)
+
+    # inter-chunk: y_i += C_i . decay(start..i) s_prev
+    decay_from_start = jnp.exp(cum)                          # (b,nc,q,h)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cc, decay_from_start, s_prev)
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)
+    y = y[:, :s] + x[:, :s].astype(jnp.float32) * D[:, None]
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, B, C, D):
+    """One-token recurrence: state (b,h,p,n); x (b,h,p); dt (b,h);
+    B, C: (b, n).  Returns (y (b,h,p), new_state)."""
+    da = jnp.exp(dt.astype(jnp.float32) * A)                 # (b,h)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    new_state = state * da[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, B.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    return y + x.astype(jnp.float32) * D[:, None], new_state
+
+
+def ssm_block(p, cfg, x, *, decode_state=None):
+    """Full Mamba2 block. x: (B, S, D).
+
+    Prefill/train: returns (out, (ssm_state, conv_tail)).
+    Decode (decode_state given): S == 1, uses cached conv tail + state.
+    """
+    b, s, d = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z, bc_in, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xi, bc_in], axis=-1)          # (B,S,di+2n)
+
+    if decode_state is None:
+        conv = _causal_conv(conv_in, p["conv_w"])
+        conv_tail = conv_in[:, -(cfg.conv_width - 1):]
+    else:
+        ssm_state, conv_buf = decode_state                   # buf (B,K-1,C)
+        window = jnp.concatenate([conv_buf, conv_in], axis=1)
+        conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"])[:, None]
+        conv_tail = window[:, 1:]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs = conv[..., :di].reshape(b, s, h, pdim)
+    B_ = conv[..., di:di + n]
+    C_ = conv[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if decode_state is None:
+        y, final = ssd_chunked(xs, dt, A, B_, C_, p["D"], cfg.ssm_chunk)
+        new_state = (final, conv_tail)
+    else:
+        y1, final = ssd_decode_step(decode_state[0], xs[:, 0], dt[:, 0],
+                                    A, B_[:, 0], C_[:, 0], p["D"])
+        y = y1[:, None]
+        new_state = (final, conv_tail)
+
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"]), new_state

@@ -1,0 +1,324 @@
+"""Model assembly for every assigned architecture family.
+
+All families share one parameter/layout discipline:
+  * per-layer params are stacked on a leading L axis and the forward pass is
+    a ``lax.scan`` over layers (HLO size O(1) in depth; bodies are
+    rematerialized for training),
+  * caches for decode are stacked the same way and threaded through the scan,
+  * the hybrid (zamba2) model interleaves scanned Mamba2 groups with a single
+    *weight-shared* attention block applied every ``attn_every`` layers
+    (its KV caches are per-application),
+  * enc-dec (whisper) runs a bidirectional encoder scan + causal/cross
+    decoder scan; the conv/audio frontend is a stub (inputs arrive as frame
+    embeddings, per the assignment).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import attend, decode_attention
+from .layers import apply_rope, chunked_xent, dense_init, rmsnorm, swiglu, \
+    swiglu_init
+from .moe import moe_apply, moe_init
+from .ssm import ssm_block, ssm_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Attention block (params + apply), GQA + RoPE/M-RoPE + optional cross-attn
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig, dtype, cross: bool = False):
+    d, h, hk = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.head_dim()
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * dh), dtype),
+        "wk": dense_init(ks[1], (d, hk * dh), dtype),
+        "wv": dense_init(ks[2], (d, hk * dh), dtype),
+        "wo": dense_init(ks[3], (h * dh, d), dtype),
+        "norm": jnp.ones((d,), dtype),
+    }
+
+
+def _qkv(p, cfg: ArchConfig, x, kv_src=None):
+    b, s, d = x.shape
+    dh = cfg.head_dim()
+    src = x if kv_src is None else kv_src
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = jnp.einsum("bsd,de->bse", src, p["wk"]).reshape(
+        b, src.shape[1], cfg.n_kv_heads, dh)
+    v = jnp.einsum("bsd,de->bse", src, p["wv"]).reshape(
+        b, src.shape[1], cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+def attn_apply(p, cfg: ArchConfig, x, positions, *, causal=True,
+               use_rope=True):
+    """Self-attention over a full sequence (train / prefill)."""
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, xn)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    out = attend(q, k, v, causal=causal, window=cfg.sliding_window)
+    b, s, _ = x.shape
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+
+
+def attn_prefill(p, cfg, x, positions, cache_len: int):
+    """Prefill that also returns the (padded) KV cache."""
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, xn)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    out = attend(q, k, v, causal=True, window=cfg.sliding_window)
+    b, s, _ = x.shape
+    pad = cache_len - s
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+    return y, (kc, vc)
+
+
+def attn_decode(p, cfg, x, kc, vc, cur_idx):
+    """One-token decode: insert k/v at cur_idx, attend over cache."""
+    b = x.shape[0]
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, xn)
+    pos = jnp.full((b, 1), cur_idx, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.mrope)
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, cur_idx, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, cur_idx, 0, 0))
+    out = decode_attention(q, kc, vc, cur_idx + 1)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, -1), p["wo"])
+    return y, kc, vc
+
+
+def cross_apply(p, cfg, x, enc_kv):
+    """Cross-attention against precomputed encoder K/V (no rope)."""
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    b, s, d = x.shape
+    dh = cfg.head_dim()
+    q = jnp.einsum("bsd,de->bse", xn, p["wq"]).reshape(b, s, cfg.n_heads, dh)
+    k, v = enc_kv
+    out = attend(q, k, v, causal=False)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+
+
+def enc_kv_of(p, cfg, enc_out):
+    b, se, _ = enc_out.shape
+    dh = cfg.head_dim()
+    k = jnp.einsum("bsd,de->bse", enc_out, p["wk"]).reshape(
+        b, se, cfg.n_kv_heads, dh)
+    v = jnp.einsum("bsd,de->bse", enc_out, p["wv"]).reshape(
+        b, se, cfg.n_kv_heads, dh)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Layer init (family-specific) and parameter assembly
+# ---------------------------------------------------------------------------
+
+def _mlp_layer_init(key, cfg, dtype, d_ff):
+    k1, k2 = jax.random.split(key)
+    p = {"attn": attn_init(k1, cfg, dtype),
+         "mlp": swiglu_init(k2, cfg.d_model, d_ff, dtype),
+         "mlp_norm": jnp.ones((cfg.d_model,), dtype)}
+    return p
+
+
+def _moe_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"attn": attn_init(k1, cfg, dtype),
+            "moe": moe_init(k2, cfg, dtype),
+            "mlp_norm": jnp.ones((cfg.d_model,), dtype)}
+
+
+def _encdec_dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"attn": attn_init(k1, cfg, dtype),
+            "cross": attn_init(k2, cfg, dtype),
+            "mlp": swiglu_init(k3, cfg.d_model, cfg.d_ff, dtype),
+            "mlp_norm": jnp.ones((cfg.d_model,), dtype)}
+
+
+def _stack(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), dtype)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["layers"] = _stack(
+            lambda k: _mlp_layer_init(k, cfg, dtype, cfg.d_ff),
+            ks[2], cfg.n_layers)
+    elif fam == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        p["layers"] = _stack(lambda k: _moe_layer_init(k, cfg, dtype),
+                             ks[2], n_moe)
+        if cfg.first_dense_layers:
+            dff = cfg.d_ff or cfg.d_ff_expert * max(1, cfg.top_k)
+            p["dense_layers"] = _stack(
+                lambda k: _mlp_layer_init(k, cfg, dtype, dff),
+                ks[3], cfg.first_dense_layers)
+    elif fam == "ssm":
+        p["layers"] = _stack(lambda k: {"ssm": ssm_init(k, cfg, dtype)},
+                             ks[2], cfg.n_layers)
+    elif fam == "hybrid":
+        n_app = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        p["groups"] = jax.vmap(
+            lambda kg: _stack(lambda k: {"ssm": ssm_init(k, cfg, dtype)},
+                              kg, per))(jax.random.split(ks[2], n_app))
+        p["shared"] = _mlp_layer_init(ks[3], cfg, dtype, cfg.d_ff)
+    elif fam == "encdec":
+        p["enc_layers"] = _stack(
+            lambda k: _mlp_layer_init(k, cfg, dtype, cfg.d_ff),
+            ks[2], cfg.n_enc_layers)
+        p["dec_layers"] = _stack(
+            lambda k: _encdec_dec_layer_init(k, cfg, dtype),
+            ks[3], cfg.n_layers)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree -- the dry-run's no-allocation param stand-in."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _dense_layer_fwd(cfg, layer, x, positions):
+    from ..dist.annotate import batch_activations
+    x = x + attn_apply(layer["attn"], cfg, x, positions)
+    xn = rmsnorm(x, layer["mlp_norm"], cfg.norm_eps)
+    return batch_activations(x + swiglu(layer["mlp"], xn))
+
+
+def _moe_layer_fwd(cfg, layer, x, positions):
+    from ..dist.annotate import batch_activations
+    x = x + attn_apply(layer["attn"], cfg, x, positions)
+    xn = rmsnorm(x, layer["mlp_norm"], cfg.norm_eps)
+    return batch_activations(x + moe_apply(layer["moe"], cfg, xn))
+
+
+def _embed(cfg, p, batch):
+    x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([ve, x[:, ve.shape[1]:]], axis=1)
+    # re-anchor the residual stream to batch-over-DP: the vocab/TP-sharded
+    # table otherwise propagates feature sharding into every layer
+    # (EXPERIMENTS.md section Perf, iteration 1)
+    from ..dist.annotate import batch_activations
+    return batch_activations(x)
+
+
+def _head(cfg, p):
+    return p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+
+
+def forward(cfg: ArchConfig, p: Params, batch) -> jnp.ndarray:
+    """Full-sequence forward -> final hidden states (B, S, D)."""
+    fam = cfg.family
+    if fam == "encdec":
+        return _encdec_forward(cfg, p, batch)
+    x = _embed(cfg, p, batch)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if fam in ("dense", "vlm", "moe"):
+        fwd = _dense_layer_fwd if fam != "moe" else _moe_layer_fwd
+        if fam == "moe" and cfg.first_dense_layers:
+            def dbody(xx, layer):
+                return jax.checkpoint(
+                    lambda a, l: _dense_layer_fwd(cfg, l, a, positions))(
+                        xx, layer), None
+            x, _ = jax.lax.scan(dbody, x, p["dense_layers"])
+
+        def body(xx, layer):
+            return jax.checkpoint(
+                lambda a, l: fwd(cfg, l, a, positions))(xx, layer), None
+        x, _ = jax.lax.scan(body, x, p["layers"])
+    elif fam == "ssm":
+        from ..dist.annotate import batch_activations
+
+        def body(xx, layer):
+            def blk(a, l):
+                y, _ = ssm_block(l["ssm"], cfg, a)
+                return batch_activations(a + y)
+            return jax.checkpoint(blk)(xx, layer), None
+        x, _ = jax.lax.scan(body, x, p["layers"])
+    elif fam == "hybrid":
+        from ..dist.annotate import batch_activations
+        n_app = cfg.n_layers // cfg.attn_every
+
+        def body(xx, layer):
+            def blk(a, l):
+                y, _ = ssm_block(l["ssm"], cfg, a)
+                return batch_activations(a + y)
+            return jax.checkpoint(blk)(xx, layer), None
+        for a in range(n_app):
+            group = jax.tree.map(lambda t, a=a: t[a], p["groups"])
+            x, _ = jax.lax.scan(body, x, group)
+            x = jax.checkpoint(
+                lambda xx: _dense_layer_fwd(cfg, p["shared"], xx, positions))(x)
+    return rmsnorm(x, p["final_norm"], cfg.norm_eps)
+
+
+def _encdec_forward(cfg, p, batch):
+    enc = batch["frames"].astype(p["embed"].dtype)     # stub frontend output
+    b, se, _ = enc.shape
+    epos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+
+    def ebody(xx, layer):
+        def blk(a, l):
+            a = a + attn_apply(l["attn"], cfg, a, epos, causal=False)
+            an = rmsnorm(a, l["mlp_norm"], cfg.norm_eps)
+            return a + swiglu(l["mlp"], an)
+        return jax.checkpoint(blk)(xx, layer), None
+    enc, _ = jax.lax.scan(ebody, enc, p["enc_layers"])
+
+    x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    sd = x.shape[1]
+    dpos = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32), (b, sd))
+
+    def dbody(xx, layer):
+        def blk(a, l):
+            a = a + attn_apply(l["attn"], cfg, a, dpos)
+            a = a + cross_apply(l["cross"], cfg, a, enc_kv_of(l["cross"], cfg, enc))
+            an = rmsnorm(a, l["mlp_norm"], cfg.norm_eps)
+            return a + swiglu(l["mlp"], an)
+        return jax.checkpoint(blk)(xx, layer), None
+    x, _ = jax.lax.scan(dbody, x, p["dec_layers"])
+    return rmsnorm(x, p["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ArchConfig, p: Params, batch) -> jnp.ndarray:
+    hidden = forward(cfg, p, batch)
+    return chunked_xent(hidden, _head(cfg, p), batch["labels"])
+
+
+def logits_fn(cfg, p, hidden):
+    return jnp.einsum("bsd,dv->bsv", hidden, _head(cfg, p)).astype(jnp.float32)

@@ -1,0 +1,4 @@
+from . import adamw
+from .adamw import clip_by_global_norm, cosine_schedule, global_norm
+
+__all__ = ["adamw", "clip_by_global_norm", "cosine_schedule", "global_norm"]

@@ -1,0 +1,6 @@
+from .train_loop import TrainConfig, train
+from .serve_loop import DecodeReplica, Request, ServingCluster
+from .elastic import ElasticTrainer, ElasticReport
+
+__all__ = ["TrainConfig", "train", "DecodeReplica", "Request",
+           "ServingCluster", "ElasticTrainer", "ElasticReport"]

@@ -1,0 +1,109 @@
+"""Elastic data-parallel training with Tardis-leased parameters.
+
+The learner publishes parameter versions into a TardisStore; each worker
+computes gradients against its *leased* copy.  Because a publish jumps ahead
+of outstanding leases instead of broadcasting, workers that are mid-step keep
+a consistent (slightly stale) version and renew at their next step -- the
+paper's deferred update propagation, used here as **bounded logical
+staleness**: a worker can be at most ``lease`` logical ticks behind, and the
+global order of versions is explicit in the timestamps.
+
+Workers join and leave freely: joining = first acquire (full payload),
+leaving = nothing at all (no sharer list to clean up -- the O(log N) scaling
+argument of the paper, applied to the training control plane).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.store import Replica, TardisStore
+from ..optim import adamw
+
+
+@dataclasses.dataclass
+class ElasticReport:
+    steps: int
+    losses: List[float]
+    versions_used: List[int]
+    max_staleness: int
+    renewals: int
+    data_less: int
+    joins: int
+    leaves: int
+
+
+class ElasticWorker:
+    def __init__(self, store: TardisStore, name: str, grad_fn,
+                 selfinc_period: int = 1):
+        self.reader = Replica(store, name, selfinc_period=selfinc_period)
+        self.grad_fn = grad_fn
+
+    def step(self, batch):
+        params, wts = self.reader.read("params"), \
+            self.reader._cache["params"][1]
+        loss, grads = self.grad_fn(params, batch)
+        return loss, grads, wts
+
+
+class ElasticTrainer:
+    """Learner + dynamic worker pool (cooperative simulation of a fleet)."""
+
+    def __init__(self, params, grad_fn, make_batch, *, lease: int = 2,
+                 lr: float = 1e-2):
+        self.store = TardisStore(lease=lease)
+        self.pub = Replica(self.store, "learner")
+        nbytes = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(params))
+        self.nbytes = nbytes
+        self.pub.write("params", params, nbytes=nbytes)
+        self.params = params
+        self.opt = adamw.init(params)
+        self.grad_fn = grad_fn
+        self.make_batch = make_batch
+        self.lr = lr
+        self.workers: List[ElasticWorker] = []
+        self._wid = 0
+        self.joins = 0
+        self.leaves = 0
+
+    def scale_to(self, n: int):
+        while len(self.workers) < n:
+            self.workers.append(ElasticWorker(
+                self.store, f"w{self._wid}", self.grad_fn))
+            self._wid += 1
+            self.joins += 1
+        while len(self.workers) > n:
+            self.workers.pop()            # no protocol action on leave
+            self.leaves += 1
+
+    def run(self, steps: int,
+            schedule: Callable[[int], int] = lambda s: 2) -> ElasticReport:
+        losses, versions = [], []
+        max_stale = 0
+        for s in range(steps):
+            self.scale_to(max(1, schedule(s)))
+            grad_sum = None
+            cur_wts = self.store.versions()["params"]
+            for i, w in enumerate(self.workers):
+                loss, grads, wts = w.step(self.make_batch(s, i))
+                versions.append(wts)
+                max_stale = max(max_stale, cur_wts - wts)
+                g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+                grad_sum = g32 if grad_sum is None else jax.tree.map(
+                    jnp.add, grad_sum, g32)
+                losses.append(float(loss))
+            grads = jax.tree.map(lambda g: g / len(self.workers), grad_sum)
+            self.params, self.opt, _ = adamw.update(
+                self.params, grads, self.opt, lr=self.lr, weight_decay=0.0)
+            self.pub.write("params", self.params, nbytes=self.nbytes)
+        st = self.store.stats
+        return ElasticReport(
+            steps=steps, losses=losses, versions_used=versions,
+            max_staleness=max_stale, renewals=st.renews,
+            data_less=st.renew_data_less, joins=self.joins,
+            leaves=self.leaves)

@@ -1,0 +1,31 @@
+"""E-state extension (paper section IV-D): SC-preserving renewal elimination."""
+from repro.core import SimConfig, make_trace, simulate
+from repro.core.check import check_sc
+
+CFG = dict(max_steps=900_000)
+
+
+def test_estate_preserves_sc_and_cuts_renewals():
+    tr = make_trace("water_sp", 8, scale=0.3)
+    base = simulate(tr, "tardis", SimConfig(**CFG), log=True)
+    est = simulate(tr, "tardis", SimConfig(estate=True, **CFG), log=True)
+    check_sc(base.log, 8)
+    check_sc(est.log, 8)
+    assert est.stats["n_egrant"] > 0
+    assert est.stats["n_renew"] < base.stats["n_renew"]
+    assert est.stats["traffic"] < base.stats["traffic"]
+
+
+def test_estate_sc_under_write_sharing():
+    """E-granted lines must flush correctly when another core writes."""
+    tr = make_trace("water_nsq", 8, scale=0.3)
+    est = simulate(tr, "tardis", SimConfig(estate=True, **CFG), log=True)
+    assert not est.aborted
+    check_sc(est.log, 8)
+
+
+def test_estate_sc_spin_workload():
+    tr = make_trace("volrend", 8, scale=0.3)
+    est = simulate(tr, "tardis", SimConfig(estate=True, **CFG), log=True)
+    assert not est.aborted
+    check_sc(est.log, 8)

@@ -1,0 +1,109 @@
+"""Pallas kernels vs. pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.tardis_lease.ops import lease_check
+from repro.kernels.tardis_lease.ref import lease_check_ref
+
+KEY = jax.random.PRNGKey(0)
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(8, 128), (32, 512), (5, 2048), (16, 80)])
+def test_rmsnorm_kernel(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), dtype)
+    out = rmsnorm(x, w, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,s,h,hk,d", [
+    (1, 128, 4, 4, 128),         # MHA, aligned head dim
+    (2, 256, 8, 2, 64),          # GQA, padded head dim
+    (1, 256, 4, 1, 80),          # MQA, zamba-style 80-dim heads
+])
+def test_flash_attention_kernel(b, s, h, hk, d, causal, dtype):
+    q = jax.random.normal(KEY, (b, s, h, d), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hk, d), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("kv_len", [1, 100, 512, 1024])
+@pytest.mark.parametrize("b,h,hk,d,t", [(2, 8, 2, 64, 1024),
+                                        (1, 4, 4, 128, 512)])
+def test_decode_attention_kernel(b, h, hk, d, t, kv_len):
+    q = jax.random.normal(KEY, (b, 1, h, d))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (b, t, hk, d))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (b, t, hk, d))
+    out = decode_attention(q, kc, vc, jnp.int32(kv_len), interpret=True)
+    ref = decode_attention_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 128, 4, 16, 32, 32),
+    (1, 96, 2, 32, 16, 16),      # padded final chunk path
+    (1, 64, 8, 64, 128, 64),     # mamba2-130m-like dims
+])
+def test_ssd_scan_kernel(b, s, h, p, n, chunk):
+    x = jax.random.normal(KEY, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(3), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(4), (h,)) * 0.5)
+    B = jax.random.normal(jax.random.PRNGKey(5), (b, s, n))
+    C = jax.random.normal(jax.random.PRNGKey(6), (b, s, n))
+    D = jnp.ones((h,))
+    y1, s1 = ssd_scan(x, dt, A, B, C, D, chunk=chunk, interpret=True)
+    y2, s2 = ssd_scan_ref(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [7, 128, 1000, 4096])
+@pytest.mark.parametrize("pts,lease", [(0, 10), (55, 10), (1000, 64)])
+def test_tardis_lease_kernel(n, pts, lease):
+    rng = np.random.default_rng(n)
+    wts = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+    rts = jnp.maximum(wts, jnp.asarray(rng.integers(0, 120, n), jnp.int32))
+    req = jnp.where(jnp.asarray(rng.random(n) < 0.5), wts, wts - 1)
+    out = lease_check(wts, rts, req, pts, lease, interpret=True)
+    ref = lease_check_ref(wts, rts, req, jnp.int32(pts), jnp.int32(lease))
+    for k in ("new_rts", "renew_ok", "expired", "write_ts"):
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]),
+                                      err_msg=k)
+
+
+def test_lease_kernel_matches_simulator_rules():
+    """The kernel's rules ARE Table III: cross-check against protocol fns."""
+    from repro.core import protocol as P
+    wts = jnp.asarray([5, 5, 9], jnp.int32)
+    rts = jnp.asarray([8, 20, 9], jnp.int32)
+    req = jnp.asarray([5, 4, 9], jnp.int32)
+    out = lease_check(wts, rts, req, 10, 10, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(out["new_rts"]),
+        np.asarray(P.lease_extend(wts, rts, jnp.int32(10), jnp.int32(10))))
+    assert out["write_ts"] == 21     # jump past the longest lease

@@ -1,0 +1,117 @@
+"""Unit + property tests for the Tardis protocol rules (paper Tables I-III)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import protocol as P
+
+ts = st.integers(min_value=0, max_value=2**28)
+lease = st.integers(min_value=1, max_value=1000)
+
+
+class TestTableI:
+    def test_load_updates(self):
+        pts, rts = P.load_no_cache(5, 10, 12)
+        assert pts == 10 and rts == 12          # pts joins wts; rts keeps max
+
+    def test_load_bumps_rts(self):
+        pts, rts = P.load_no_cache(20, 10, 12)
+        assert pts == 20 and rts == 20
+
+    def test_store_jumps_past_lease(self):
+        pts, wts, rts = P.store_no_cache(3, 10, 17)
+        assert pts == wts == rts == 18          # rts + 1
+
+    @given(pts=ts, wts=ts, rts=ts)
+    @settings(max_examples=200, deadline=None)
+    def test_load_monotone(self, pts, wts, rts):
+        rts = max(rts, wts)
+        new_pts, new_rts = P.load_no_cache(pts, wts, rts)
+        assert new_pts >= pts                    # Rule 1: pts never decreases
+        assert new_pts >= wts                    # Rule 2: after the write
+        assert new_rts >= rts
+
+    @given(pts=ts, wts=ts, rts=ts)
+    @settings(max_examples=200, deadline=None)
+    def test_store_after_all_reads(self, pts, wts, rts):
+        rts = max(rts, wts)
+        new_pts, new_wts, new_rts = P.store_no_cache(pts, wts, rts)
+        assert new_pts > rts                     # write ordered after last read
+        assert new_pts >= pts
+        assert new_wts == new_rts == new_pts
+
+
+class TestTableII:
+    @given(pts=ts, wts=ts, rts=ts)
+    @settings(max_examples=200, deadline=None)
+    def test_exclusive_store_exceeds_reads(self, pts, wts, rts):
+        p2, w2, r2 = P.store_hit_exclusive(pts, rts)
+        assert p2 == w2 == r2 and p2 > rts and p2 >= pts
+
+    @given(pts=ts, rts=ts)
+    @settings(max_examples=200, deadline=None)
+    def test_private_write_no_advance(self, pts, rts):
+        p2, w2, r2 = P.store_hit_private(pts, rts)
+        assert p2 == max(pts, rts)               # no +1: physical order implicit
+
+    @given(wts=ts, rts=ts, pts=ts, l=lease)
+    @settings(max_examples=200, deadline=None)
+    def test_writeback_extends(self, wts, rts, pts, l):
+        out = P.writeback_rts(wts, rts, pts, l)
+        assert out >= rts and out >= wts + l and out >= pts + l
+
+
+class TestTableIII:
+    @given(wts=ts, rts=ts, pts=ts, l=lease)
+    @settings(max_examples=200, deadline=None)
+    def test_lease_extend_covers_reader(self, wts, rts, pts, l):
+        out = P.lease_extend(wts, rts, pts, l)
+        assert out >= pts + l                     # reader can read till pts+l
+        assert out >= rts                         # never shrinks a lease
+
+    def test_renewable_is_version_match(self):
+        assert bool(P.renewable(7, 7)) and not bool(P.renewable(6, 7))
+
+    @given(mts=ts, rts=ts)
+    @settings(max_examples=100, deadline=None)
+    def test_evict_mts_monotone(self, mts, rts):
+        assert P.evict_mts(mts, rts) == max(mts, rts)
+
+
+class TestBatched:
+    @given(st.lists(st.tuples(ts, ts), min_size=1, max_size=50), ts)
+    @settings(max_examples=100, deadline=None)
+    def test_batched_read_check(self, pairs, pts):
+        wts = jnp.array([min(a, b) for a, b in pairs])
+        rts = jnp.array([max(a, b) for a, b in pairs])
+        readable, new_pts = P.batched_read_check(pts, wts, rts)
+        np.testing.assert_array_equal(np.asarray(readable), pts <= np.asarray(rts))
+        assert new_pts >= pts
+
+    @given(st.lists(ts, min_size=1, max_size=50), ts)
+    @settings(max_examples=100, deadline=None)
+    def test_batched_write_advance(self, rts_list, pts):
+        rts = jnp.array(rts_list)
+        mask = jnp.ones(len(rts_list), bool)
+        new_pts, new_wts, new_rts = P.batched_write_advance(pts, rts, mask)
+        assert new_pts > max(rts_list)            # jumps every lease
+        assert new_pts >= pts
+        np.testing.assert_array_equal(np.asarray(new_wts), new_pts)
+
+
+def test_example_program_figure1():
+    """Paper Fig. 1 walk-through (lease=10): the exact timestamps."""
+    lease_ = 10
+    pts0 = pts1 = 0
+    # step 1: core0 stores A (rts=wts=0 at manager)
+    pts0, a_wts, a_rts = P.store_no_cache(pts0, 0, 0)
+    assert pts0 == 1 and a_wts == 1
+    # step 2: core0 loads B -> lease to max(rts, wts+lease, pts+lease) = 11
+    b_rts = int(P.lease_extend(0, 0, pts0, lease_))
+    assert b_rts == 11
+    # step 3: core1 stores B: jumps to rts+1 = 12 without invalidating core0
+    pts1, b_wts2, b_rts2 = P.store_no_cache(pts1, 0, b_rts)
+    assert pts1 == 12
+    # core0 can still read its leased B=0 copy at pts0=1 <= 11: legal
+    assert pts0 <= b_rts

@@ -1,0 +1,59 @@
+"""Property-based sequential-consistency fuzzing of the Tardis simulator.
+
+Hypothesis generates arbitrary small multi-core programs (loads/stores over
+a tiny address space, padded to a fixed rectangular trace so the jitted
+simulator compiles exactly once); every interleaving the simulator produces
+must satisfy SC Rules 1-2 in physiological order.  This is the
+machine-checked analogue of the paper's Graphite functional checks.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SimConfig, simulate
+from repro.core.check import check_sc
+from repro.core.traces import END, LOAD, STORE, Trace
+
+N_CORES = 4
+LEN = 24          # fixed trace length -> one compile for the whole suite
+N_ADDR = 8
+
+op = st.tuples(st.integers(0, 1),                 # load/store
+               st.integers(0, N_ADDR - 1),        # address
+               st.integers(0, 3))                 # think cycles
+
+program = st.lists(st.lists(op, min_size=1, max_size=LEN - 1),
+                   min_size=N_CORES, max_size=N_CORES)
+
+
+def _build(prog) -> Trace:
+    t = np.full((N_CORES, LEN), END, np.int32)
+    a = np.zeros((N_CORES, LEN), np.int32)
+    x = np.zeros((N_CORES, LEN), np.int32)
+    k = np.zeros((N_CORES, LEN), np.int32)
+    for c, ops in enumerate(prog):
+        for j, (kind, addr, think) in enumerate(ops):
+            t[c, j] = STORE if kind else LOAD
+            a[c, j] = addr
+            k[c, j] = think
+    return Trace(t, a, x, k, N_ADDR, "fuzz")
+
+
+@given(program, st.sampled_from([1, 3, 10, 100]),
+       st.sampled_from([2, 10, 50]))
+@settings(max_examples=60, deadline=None)
+def test_random_programs_are_sequentially_consistent(prog, lease, period):
+    tr = _build(prog)
+    res = simulate(tr, "tardis",
+                   SimConfig(lease=lease, selfinc_period=period,
+                             max_steps=50_000), log=True)
+    assert not res.aborted
+    check_sc(res.log, N_CORES)
+
+
+@given(program)
+@settings(max_examples=20, deadline=None)
+def test_random_programs_directory_consistent(prog):
+    tr = _build(prog)
+    res = simulate(tr, "directory", SimConfig(max_steps=50_000), log=True)
+    assert not res.aborted
+    check_sc(res.log, N_CORES)

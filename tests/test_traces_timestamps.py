@@ -1,0 +1,115 @@
+"""Trace-generator well-formedness + base-delta compression properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import protocol as P
+from repro.core import timestamps as T
+from repro.core.traces import (BARRIER, END, SPIN, STORE, TRACE_GENERATORS,
+                               make_trace)
+
+
+@pytest.mark.parametrize("name", sorted(TRACE_GENERATORS))
+def test_trace_wellformed(name):
+    tr = make_trace(name, 8, scale=0.3)
+    assert tr.op_type.shape == tr.op_addr.shape == tr.op_aux.shape
+    assert (tr.op_addr >= 0).all() and (tr.op_addr < tr.n_addr).all()
+    # every core's trace ends with the END sentinel
+    for c in range(8):
+        ops = tr.op_type[c]
+        ends = np.where(ops == END)[0]
+        assert len(ends) > 0
+    # barriers appear for every core with matching ids
+    bar_ids = [set(tr.op_aux[c][tr.op_type[c] == BARRIER]) for c in range(8)]
+    assert all(b == bar_ids[0] for b in bar_ids)
+
+
+@pytest.mark.parametrize("name", sorted(TRACE_GENERATORS))
+def test_spin_targets_satisfiable(name):
+    """Every spin_until(addr, k) must have >= k prior stores to addr
+    somewhere in the trace (otherwise the simulation livelocks)."""
+    tr = make_trace(name, 8, scale=0.3)
+    n_stores = {}
+    for c in range(tr.n_cores):
+        for t, a in zip(tr.op_type[c], tr.op_addr[c]):
+            if t == STORE:
+                n_stores[int(a)] = n_stores.get(int(a), 0) + 1
+    for c in range(tr.n_cores):
+        for t, a, x in zip(tr.op_type[c], tr.op_addr[c], tr.op_aux[c]):
+            if t == SPIN:
+                # target version k requires at least k stores released after
+                assert n_stores.get(int(a), 0) >= int(x), \
+                    f"{name}: spin on {a} for v{x} but only " \
+                    f"{n_stores.get(int(a), 0)} stores exist"
+
+
+def test_trace_deterministic():
+    a = make_trace("barnes", 8, seed=3, scale=0.3)
+    b = make_trace("barnes", 8, seed=3, scale=0.3)
+    np.testing.assert_array_equal(a.op_addr, b.op_addr)
+
+
+ts_small = st.integers(min_value=0, max_value=1 << 22)
+
+
+class TestCompression:
+    @given(st.lists(st.tuples(ts_small, ts_small), min_size=1, max_size=32),
+           st.integers(0, 1 << 22), st.sampled_from([8, 14, 20]))
+    @settings(max_examples=100, deadline=None)
+    def test_rebase_preserves_order_and_only_increases(self, pairs, base,
+                                                       bits):
+        wts = jnp.array([min(a, b) + base for a, b in pairs])
+        rts = jnp.array([max(a, b) + base for a, b in pairs])
+        state = jnp.full(len(pairs), P.SHARED)
+        bts = jnp.int32(base)
+        nb, nw, nr, ns, killed = T.apply_rebase(
+            bts, wts, rts, state, is_private=False, bits=bits)
+        assert nb == base + T.rebase_amount(bits)
+        # LLC rebase: timestamps never decrease, no lines die
+        assert (np.asarray(nw) >= np.asarray(wts)).all()
+        assert (np.asarray(nr) >= np.asarray(rts)).all()
+        assert int(killed) == 0
+
+    @given(st.integers(0, 1 << 20), st.sampled_from([8, 14, 20]))
+    @settings(max_examples=50, deadline=None)
+    def test_private_rebase_kills_stale_shared_lines(self, base, bits):
+        bts = jnp.int32(base)
+        # one line far in the past (expired long ago), one current
+        wts = jnp.array([base - 0, base + (1 << bits) - 1])
+        rts = jnp.array([base + 1, base + (1 << bits) - 1])
+        state = jnp.array([P.SHARED, P.SHARED])
+        nb, nw, nr, ns, killed = T.apply_rebase(
+            bts, wts, rts, state, is_private=True, bits=bits)
+        if base + 1 < int(nb):
+            assert int(ns[0]) == P.INVALID      # stale lease invalidated
+            assert int(killed) >= 1
+        assert int(ns[1]) == P.SHARED           # live line survives
+
+    def test_storage_bits_table7(self):
+        assert T.storage_bits_per_line(64, "full-map") == 64
+        assert T.storage_bits_per_line(64, "ackwise", ackwise_ptrs=4) == 24
+        assert T.storage_bits_per_line(64, "tardis") == 40
+        assert T.storage_bits_per_line(256, "tardis") == 40   # O(log N) flat
+
+
+class TestAnalyticRoofline:
+    def test_model_flops_sane(self):
+        from benchmarks.analytic import model_flops
+        from repro.configs import SHAPE_BY_NAME, get_arch
+        cfg = get_arch("llama3-405b")
+        f = model_flops(cfg, SHAPE_BY_NAME["train_4k"])
+        # 6 * 405e9 * 1.048e6 tokens = 2.55e18 (+ attention)
+        assert 2.0e18 < f["model_flops"] < 4.0e18
+        fd = model_flops(cfg, SHAPE_BY_NAME["decode_32k"])
+        # 2 * 405e9 * 128 + attention over the 32k cache ~ 1.4e14
+        assert 1.0e14 < fd["model_flops"] < 1e16
+
+    def test_roofline_terms_positive(self):
+        from benchmarks.analytic import roofline_terms
+        from repro.configs import SHAPE_BY_NAME, get_arch
+        t = roofline_terms(get_arch("glm4-9b"), SHAPE_BY_NAME["train_4k"],
+                           256, collective_bytes_per_dev=1e9)
+        assert t["compute_s"] > 0 and t["memory_s"] > 0
+        assert t["dominant"] in ("compute", "memory", "collective")
