@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 verification: full test suite + a 1-cell dry-run smoke.
+#
+#   bash scripts/check.sh           # everything
+#   bash scripts/check.sh -k store  # pass extra args through to pytest
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+
+# 1-cell lower+compile+cost-analysis smoke on the production mesh shapes
+# (decode_32k is the cheapest cell; --no-hlo skips HLO text parsing).
+out="$(mktemp -t dryrun_check_XXXX.json)"
+python -m repro.launch.dryrun --mesh single --archs tinyllama-1.1b \
+    --shapes decode_32k --no-hlo --out "$out"
+python - "$out" <<'EOF'
+import json, sys
+recs = json.load(open(sys.argv[1]))
+ok = [r for r in recs if r["status"] == "ok"]
+assert ok, f"no ok cells: {recs}"
+assert any(r.get("cost_analysis", {}).get("flops", 0) > 0 for r in ok), \
+    f"no nonzero flops: {recs}"
+print(f"dryrun smoke: {len(ok)} ok cell(s), nonzero flops")
+EOF
+echo "check.sh: all green"

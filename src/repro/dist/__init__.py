@@ -1,0 +1,18 @@
+"""Distribution layer: sharding rules, gradient collectives, activation
+annotations.
+
+This is the single place that knows how tensors land on the (pod, data,
+model) production mesh:
+
+  * :mod:`repro.dist.sharding`    -- NamedSharding trees for params /
+    optimizer state / batches / decode caches (divisibility-guarded,
+    expert-parallel MoE placement, pod-axis fallback),
+  * :mod:`repro.dist.collectives` -- int8 error-feedback gradient
+    compression and scan-based microbatch accumulation,
+  * :mod:`repro.dist.annotate`    -- activation sharding constraints that
+    bind to the ambient mesh (no-ops outside a mesh context, so model code
+    runs unchanged on a single host).
+"""
+from . import annotate, collectives, sharding
+
+__all__ = ["annotate", "collectives", "sharding"]

@@ -1,0 +1,67 @@
+"""Activation sharding annotations bound to the ambient mesh.
+
+Model code calls :func:`batch_activations` on residual streams and
+:func:`replicate` on tiny decode activations.  Under a mesh context (the
+dry-run's ``with mesh:`` / ``set_mesh``) these lower to
+``with_sharding_constraint``; outside any mesh context they are exact
+no-ops, so the same model code runs unannotated on a single host.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .sharding import _dp_axes
+
+
+def ambient_mesh():
+    """The mesh currently in scope, or None.
+
+    Prefers the new-style abstract mesh (``jax.sharding.set_mesh`` /
+    ``use_mesh``); falls back to the legacy ``with mesh:`` context
+    (``thread_resources.env.physical_mesh``) on older jax.
+    """
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        try:
+            m = get_abstract()
+            if m is not None and not m.empty:
+                return m
+        except Exception:
+            pass
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def batch_activations(x):
+    """Constrain an activation's leading (batch) dim to the DP axes.
+
+    Re-anchors the residual stream to batch-over-DP so feature shardings
+    introduced by TP weights don't propagate layer to layer.  No-op without
+    an ambient mesh or when the batch dim doesn't divide the DP axes.
+    """
+    mesh = ambient_mesh()
+    if mesh is None or x.ndim == 0:
+        return x
+    dp = _dp_axes(mesh, x.shape[0])
+    if dp is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = dp
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+
+def replicate(x):
+    """Constrain to fully-replicated; no-op without an ambient mesh."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec()))

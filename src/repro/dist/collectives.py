@@ -1,0 +1,96 @@
+"""Gradient collectives: int8 error-feedback compression and microbatching.
+
+``compress_grads`` quantizes each gradient leaf to int8 with a per-leaf
+scale and carries the quantization error forward as a residual (error
+feedback), so the *cumulative* dequantized sum tracks the true gradient sum
+to within one quantization step -- the residual never accumulates.  This is
+what crosses the data-parallel axis when ``TrainConfig.grad_compression``
+is on (4x fewer bytes than fp32 all-reduce).
+
+``microbatch_grads`` accumulates gradients over ``n_micro`` equal slices of
+the batch with ``lax.scan`` (O(1) HLO in the microbatch count), matching the
+full-batch gradient of the mean loss exactly for equal slice sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def init_residual(grads: Tree) -> Tree:
+    """Zero error-feedback residual matching the gradient tree (fp32)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quantize(e):
+    scale = jnp.max(jnp.abs(e)) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(e / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads: Tree, residual: Tree) -> Tuple[Tree, Tree]:
+    """Returns ((int8_tree, scale_tree), new_residual).
+
+    Each leaf is quantized as ``q = round((g + r) * 127 / max|g + r|)``;
+    the new residual is the leftover ``(g + r) - dequant(q)``.
+    """
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    r_leaves = jax.tree.leaves(residual)
+    qs, scales, res = [], [], []
+    for g, r in zip(g_leaves, r_leaves):
+        e = g.astype(jnp.float32) + r
+        q, scale = _quantize(e)
+        qs.append(q)
+        scales.append(scale)
+        res.append(e - q.astype(jnp.float32) * scale)
+    return ((treedef.unflatten(qs), treedef.unflatten(scales)),
+            treedef.unflatten(res))
+
+
+def decompress_grads(compressed) -> Tree:
+    """Inverse of :func:`compress_grads`: int8 * scale -> fp32 gradients."""
+    qs, scales = compressed
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, scales)
+
+
+def microbatch_grads(loss_fn: Callable[[Tree, Tree], jnp.ndarray],
+                     params: Tree, batch: Tree, n_micro: int
+                     ) -> Tuple[jnp.ndarray, Tree]:
+    """Mean (loss, grads) over ``n_micro`` equal batch slices via lax.scan.
+
+    ``loss_fn(params, microbatch)`` must be a *mean* loss; with equal slice
+    sizes the accumulated mean equals the full-batch value to fp32 rounding.
+    """
+    n_micro = int(n_micro)
+    if n_micro <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def split(x):
+        b = x.shape[0]
+        if b % n_micro:
+            raise ValueError(
+                f"batch dim {b} not divisible by n_micro={n_micro}")
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def body(carry, mb):
+        acc_loss, acc_grads = carry
+        loss, grads = grad_fn(params, mb)
+        acc_grads = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), acc_grads, grads)
+        return (acc_loss + loss.astype(jnp.float32), acc_grads), None
+
+    zero = (jnp.zeros((), jnp.float32),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    (loss_sum, grad_sum), _ = jax.lax.scan(body, zero, micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree.map(
+        lambda g, p: (g * inv).astype(p.dtype), grad_sum, params)
+    return loss_sum * inv, grads

@@ -1,0 +1,149 @@
+"""Sharding rules for the (pod, data, model) production mesh.
+
+One function -- :func:`param_spec` -- decides the placement of every weight
+from its tree path and shape alone (configs never annotate tensors):
+
+  * stacked per-layer weights keep their leading layer axis replicated (it is
+    scanned over, never sharded),
+  * 2-D+ weight bodies get tensor parallelism on their last dim over
+    ``model`` and FSDP on their first dim over ``('pod', 'data')``,
+  * MoE expert weights put the expert dim on ``model`` (expert parallelism)
+    and FSDP on the d_model dim,
+  * every placement is divisibility-guarded: a dim that does not divide the
+    full axis product falls back -- ``('pod', 'data')`` degrades to ``data``
+    alone (uneven-DP pod drop), and an indivisible dim replicates,
+  * 1-D bodies (norms, biases, A_log/D vectors) replicate.
+
+The ``*_shardings`` helpers wrap the specs into NamedSharding trees for the
+dry-run / launch machinery.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# Leading stacked axes per top-level parameter collection: per-layer weights
+# are stacked on an L axis (hybrid "groups" adds an application axis too).
+_STACK_DEPTH = {"layers": 1, "dense_layers": 1, "enc_layers": 1,
+                "dec_layers": 1, "groups": 2}
+
+# MoE expert weights: body-relative index of the d_model dim.
+# w_gate / w_up are (E, D, F); w_down is (E, F, D).
+_MOE_EXPERT_DMODEL = {"w_gate": 1, "w_up": 1, "w_down": 2}
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    return dict(mesh.shape)
+
+
+def _dp_axes(mesh, dim: int) -> Axes:
+    """FSDP placement for ``dim``: shard over ('pod', 'data') when divisible
+    by the full product, drop the pod axis when only ``data`` divides, and
+    replicate otherwise."""
+    ax = _axis_sizes(mesh)
+    data, pod = ax.get("data", 1), ax.get("pod", 1)
+    if pod > 1 and data > 1 and dim % (pod * data) == 0:
+        return ("pod", "data")
+    if data > 1 and dim % data == 0:
+        return "data"
+    return None
+
+
+def _model_axis(mesh, dim: int) -> Axes:
+    model = _axis_sizes(mesh).get("model", 1)
+    return "model" if model > 1 and dim % model == 0 else None
+
+
+def param_spec(mesh, path: Tuple[str, ...], shape) -> PartitionSpec:
+    """PartitionSpec for one weight, from its tree path and shape."""
+    path = tuple(str(p) for p in path)
+    stack = _STACK_DEPTH.get(path[0], 0) if path else 0
+    stack = min(stack, max(0, len(shape) - 1))
+    leaf = path[-1] if path else ""
+    body = len(shape) - stack
+    spec: list = [None] * len(shape)
+    if "moe" in path and leaf in _MOE_EXPERT_DMODEL and body == 3:
+        spec[stack] = _model_axis(mesh, shape[stack])        # experts -> EP
+        d_idx = stack + _MOE_EXPERT_DMODEL[leaf]
+        spec[d_idx] = _dp_axes(mesh, shape[d_idx])           # FSDP on d_model
+    elif body >= 2:
+        spec[-1] = _model_axis(mesh, shape[-1])              # TP on features
+        spec[stack] = _dp_axes(mesh, shape[stack])           # FSDP on inputs
+    return PartitionSpec(*spec)
+
+
+def _path_names(key_path) -> Tuple[str, ...]:
+    names = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_shardings(mesh, params) -> Any:
+    """NamedSharding tree mirroring ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(
+            mesh, param_spec(mesh, _path_names(kp), leaf.shape)),
+        params)
+
+
+def opt_shardings(mesh, opt, param_shardings) -> Any:
+    """Optimizer-state shardings: moments mirror the parameters (ZeRO);
+    everything else (step counters etc.) replicates."""
+    rep = NamedSharding(mesh, PartitionSpec())
+    return {key: (param_shardings if key in ("m", "v")
+                  else jax.tree.map(lambda _: rep, sub))
+            for key, sub in opt.items()}
+
+
+def batch_spec(mesh, shape) -> PartitionSpec:
+    """Leading (batch) dim over the DP axes, everything else replicated."""
+    if len(shape) == 0:
+        return PartitionSpec()
+    spec = [None] * len(shape)
+    spec[0] = _dp_axes(mesh, shape[0])
+    return PartitionSpec(*spec)
+
+
+def batch_shardings(mesh, batch) -> Any:
+    """Shard every batch leaf's leading (batch) dim over the DP axes."""
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(mesh, leaf.shape)), batch)
+
+
+# Decode-cache leaves by dict key: (heads_dim_index) for the model axis.
+# KV caches are (L, B, T, H, Dh); SSM state is (L, B, H, P, N); conv buffers
+# are (L, B, W, C).
+_CACHE_MODEL_DIM = {"k": 3, "v": 3, "ak": 3, "av": 3, "ck": 3, "cv": 3,
+                    "dk": 3, "dv": 3, "state": 2, "conv": 3}
+
+
+def cache_spec(mesh, name: str, shape) -> PartitionSpec:
+    """Batch dim (index 1) over DP, heads/channels dim over model."""
+    spec: list = [None] * len(shape)
+    if len(shape) >= 2:
+        spec[1] = _dp_axes(mesh, shape[1])
+    mdim = _CACHE_MODEL_DIM.get(name)
+    if mdim is not None and mdim < len(shape):
+        spec[mdim] = _model_axis(mesh, shape[mdim])
+    return PartitionSpec(*spec)
+
+
+def cache_shardings(mesh, cache) -> Any:
+    """Decode caches: batch dim over DP, heads/channels dim over model."""
+    def one(kp, leaf):
+        names = _path_names(kp)
+        name = names[-1] if names else ""
+        return NamedSharding(mesh, cache_spec(mesh, name, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -116,14 +116,11 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
     params = _attach(params, pshard)
     specs = input_specs(cfg, shape)
 
-    # ambient mesh so activation sharding constraints (dist.annotate) bind
-    import contextlib
-    if hasattr(jax.sharding, "set_mesh"):
-        mesh_ctx = jax.sharding.set_mesh(mesh)
-    elif hasattr(jax.sharding, "use_mesh"):
-        mesh_ctx = jax.sharding.use_mesh(mesh)
-    else:
-        mesh_ctx = contextlib.nullcontext()
+    # ambient mesh so activation sharding constraints (dist.annotate) bind;
+    # use_mesh is the documented context manager on newer jax (set_mesh is a
+    # global setter, not a context manager), Mesh itself works on legacy jax
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    mesh_ctx = use_mesh(mesh) if use_mesh is not None else mesh
     with mesh_ctx:
         return _lower_and_analyze(cfg, shape, mesh, rec, params, pshard,
                                   specs, t0, collect_hlo)

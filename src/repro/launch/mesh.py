@@ -11,6 +11,11 @@ import jax
 from jax.sharding import Mesh
 
 
+def _make_mesh(shape, axes, devices) -> Mesh:
+    # no axis_types: Auto is the default on every jax that accepts it.
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """Single pod: (16, 16) = (data, model) = 256 chips.
     Multi-pod: (2, 16, 16) = (pod, data, model) = 512 chips."""
@@ -25,13 +30,10 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"need {n} devices for mesh {shape}, have {len(devices)} "
             "(dry-run must set --xla_force_host_platform_device_count=512 "
             "before importing jax)")
-    return jax.make_mesh(
-        shape, axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes, devices[:n])
 
 
 def make_host_mesh(*, data: int = 1, model: int = 1) -> Mesh:
     """Small mesh for tests/examples on whatever devices exist."""
     devices = jax.devices()[: data * model]
-    return jax.make_mesh((data, model), ("data", "model"), devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"), devices)

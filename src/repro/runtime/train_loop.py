@@ -65,6 +65,7 @@ def build_step(cfg_model, tc: TrainConfig):
         params, opt_state, metrics = adamw.update(
             params, grads, opt_state, lr=lr)
         metrics["loss"] = loss
+        metrics["lr"] = lr
         return params, opt_state, residual, metrics
 
     return jax.jit(step_fn, donate_argnums=(0, 1, 2))

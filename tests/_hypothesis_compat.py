@@ -1,0 +1,183 @@
+"""Deterministic fallback for ``hypothesis`` in no-network environments.
+
+The tier-1 suite property-tests the Tardis protocol rules with hypothesis,
+but this container has no package index, so ``conftest.py`` installs this
+module under ``sys.modules["hypothesis"]`` when the real library is missing.
+It implements just the surface the suite uses -- ``given``, ``settings``,
+``assume``, and the ``strategies`` constructors ``integers``, ``lists``,
+``tuples``, ``sampled_from``, ``booleans``, ``floats`` -- backed by a
+``random.Random`` seeded from the test's qualified name, so every run draws
+the same examples (no shrinking, no example database).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume() to skip the current example."""
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+        return Strategy(draw)
+
+
+def integers(min_value=0, max_value=None):
+    if max_value is None:
+        max_value = min_value + (1 << 30)
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def lists(elements, min_size=0, max_size=None):
+    if max_size is None:
+        max_size = min_size + 10
+
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def tuples(*strats):
+    return Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def just(value):
+    return Strategy(lambda rng: value)
+
+
+def one_of(*strats):
+    return Strategy(lambda rng: strats[rng.randrange(len(strats))].example(rng))
+
+
+class settings:
+    """Both the decorator form (@settings(...)) and a no-op profile API."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_kw):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._compat_settings = self
+        return fn
+
+    @staticmethod
+    def register_profile(*_a, **_kw):
+        pass
+
+    @staticmethod
+    def load_profile(*_a, **_kw):
+        pass
+
+
+def given(*strat_args, **strat_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(wrapper, "_compat_settings", None)
+                   or getattr(fn, "_compat_settings", None))
+            n = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            executed = 0
+            for _ in range(n):
+                try:
+                    pos = tuple(s.example(rng) for s in strat_args)
+                    kw = {k: s.example(rng) for k, s in strat_kwargs.items()}
+                    fn(*args, *pos, **kw, **kwargs)
+                except _Unsatisfied:
+                    continue
+                executed += 1
+            if n > 0 and executed == 0:
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume()/filter() rejected all "
+                    f"{n} examples (vacuous property test)")
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # Hide the strategy-bound parameters from pytest's fixture resolver:
+        # keep only 'self' (and any params not drawn from strategies).
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep, to_drop = [], len(strat_args)
+        for p in params:
+            if p.name == "self":
+                keep.append(p)
+            elif to_drop > 0:
+                to_drop -= 1
+            elif p.name not in strat_kwargs:
+                keep.append(p)
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+    @staticmethod
+    def all():
+        return []
+
+
+def install() -> None:
+    """Register this shim as the ``hypothesis`` package in sys.modules."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "floats", "lists", "tuples",
+                 "sampled_from", "just", "one_of"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = Strategy
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st
+    hyp.__version__ = "0.0-compat"
+    hyp.__is_repro_compat_shim__ = True
+
+    sys.modules.setdefault("hypothesis", hyp)
+    sys.modules.setdefault("hypothesis.strategies", st)
