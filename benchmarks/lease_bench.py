@@ -1,0 +1,82 @@
+"""LeaseEngine microbench: kernel vs numpy mirror, blocks/s.
+
+Times the two hot LeaseEngine transitions -- the masked lease-check pass
+(read/renew) and the write jump-ahead -- through both backends over block
+tables of serving-realistic sizes, touching a random half of the table per
+op.  Prints the repo-standard ``name,us_per_call,derived`` CSV rows
+(benchmarks/common.py convention) with blocks/s as the derived figure.
+
+On TPU the pallas backend runs the compiled kernel; on CPU it runs in
+interpret mode, so the numpy mirror wins there -- the point of the bench is
+to *record* the ratio per platform (EXPERIMENTS.md), not to assert it.
+
+Run:  PYTHONPATH=src python benchmarks/lease_bench.py [--sizes 4096,65536]
+"""
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def bench_engine(n_blocks: int, backend: str, iters: int):
+    from repro.core import LeaseEngine
+
+    from benchmarks.common import row
+
+    eng = LeaseEngine(n_blocks, lease=64, backend=backend)
+    rng = np.random.default_rng(0)
+    idx = rng.choice(n_blocks, n_blocks // 2, replace=False)
+    req = eng.wts[idx]
+    pts = 0
+
+    pts = eng.read(idx, pts, req_wts=req).new_pts      # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pts = eng.read(idx, pts, req_wts=req).new_pts
+    dt_read = (time.perf_counter() - t0) / iters
+
+    pts = eng.write(idx, pts)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pts = eng.write(idx, pts)
+    dt_write = (time.perf_counter() - t0) / iters
+
+    blocks = len(idx)
+    row(f"lease_check/{backend}/n{n_blocks}", dt_read * 1e6,
+        f"{blocks / dt_read:.3e} blocks/s")
+    row(f"write_advance/{backend}/n{n_blocks}", dt_write * 1e6,
+        f"{blocks / dt_write:.3e} blocks/s")
+    return {"read_blocks_per_s": blocks / dt_read,
+            "write_blocks_per_s": blocks / dt_write}
+
+
+def main():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    import jax
+
+    from benchmarks.common import header
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="4096,16384,65536")
+    ap.add_argument("--iters", type=int, default=20)
+    args = ap.parse_args()
+
+    plat = jax.default_backend()
+    header(f"LeaseEngine throughput (platform={plat}; pallas backend runs "
+           f"{'compiled' if plat == 'tpu' else 'in interpret mode'})")
+    results = {}
+    for n in [int(s) for s in args.sizes.split(",")]:
+        for backend in ("pallas", "numpy"):
+            results[(n, backend)] = bench_engine(n, backend, args.iters)
+    for n in [int(s) for s in args.sizes.split(",")]:
+        k, m = results[(n, "pallas")], results[(n, "numpy")]
+        print(f"# n={n}: pallas/numpy read ratio "
+              f"{k['read_blocks_per_s'] / m['read_blocks_per_s']:.3f}, "
+              f"write ratio "
+              f"{k['write_blocks_per_s'] / m['write_blocks_per_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,4 +24,10 @@ assert any(r.get("cost_analysis", {}).get("flops", 0) > 0 for r in ok), \
     f"no nonzero flops: {recs}"
 print(f"dryrun smoke: {len(ok)} ok cell(s), nonzero flops")
 EOF
+
+# serving smoke: tinyllama replicas with prefix-KV reuse through the
+# LeaseEngine path (--check asserts prefix hits + data-less renewals).
+python examples/serve_tardis.py --replicas 2 --requests 8 --max-new 2 \
+    --layers 2 --d-model 64 --check
+
 echo "check.sh: all green"

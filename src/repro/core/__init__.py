@@ -8,11 +8,15 @@ Layers:
   * :mod:`repro.core.traces`     -- SPLASH-2-like synthetic workloads,
   * :mod:`repro.core.check`      -- sequential-consistency validators,
   * :mod:`repro.core.store`      -- TardisStore: lease-coherent object store
-                                    for params / KV blocks (framework layer).
+                                    for params / KV blocks (framework layer),
+  * :mod:`repro.core.lease_engine` -- LeaseEngine: the device-backed block
+                                    table executing Tables I-III through the
+                                    ``tardis_lease`` Pallas kernel.
 """
 from .geometry import Geometry
+from .lease_engine import LeaseEngine, LeaseStats
 from .simulator import SimConfig, SimResult, simulate
 from .traces import Trace, make_trace, TRACE_GENERATORS
 
-__all__ = ["Geometry", "SimConfig", "SimResult", "simulate", "Trace",
-           "make_trace", "TRACE_GENERATORS"]
+__all__ = ["Geometry", "LeaseEngine", "LeaseStats", "SimConfig", "SimResult",
+           "simulate", "Trace", "make_trace", "TRACE_GENERATORS"]

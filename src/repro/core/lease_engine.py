@@ -1,0 +1,271 @@
+"""LeaseEngine: the single device-backed implementation of the lease rules.
+
+The repo used to carry three divergent copies of the paper's Tables I-III --
+scalar jnp rules in :mod:`repro.core.protocol`, a numpy ``BlockTable`` mirror
+in :mod:`repro.core.store`, and an orphaned Pallas kernel under
+``repro.kernels.tardis_lease``.  This module collapses them into one
+subsystem:
+
+  * the **Pallas kernel** executes every read/renew/write-jump-ahead
+    transition against device-resident int32 ``(wts, rts)`` block tables
+    (interpret-mode fallback off-TPU),
+  * the scalar :mod:`repro.core.protocol` rules remain the differential-test
+    oracle (``kernels/tardis_lease/ref.py``),
+  * the numpy mirror survives only behind ``backend="numpy"`` so tests can
+    diff the kernel against it bit-for-bit.
+
+Timestamps are int32 logical counters guarded by a ``ts_bits`` wraparound
+rebase (paper section IV-B applied manager-side): when any timestamp reaches
+``2**ts_bits`` the whole table shifts down by ``2**(ts_bits-1)``
+(:func:`repro.core.timestamps.rebase_amount`), clamped at zero -- clamping a
+low timestamp up to the new base is the paper's "hypothetical later
+write/read of the same value", which never violates SC.  Callers holding a
+program timestamp or cached leases apply the same shift (see
+:meth:`LeaseEngine.maybe_rebase`).
+
+Traffic is charged in message flits from :data:`repro.core.protocol
+.MESSAGE_FLITS` so the engine's ledger matches the simulator's accounting:
+a read is SH_REQ per block, answered by RENEW_REP (data-less, the common
+case once a reader holds the right version) or SH_REP headers plus payload
+flits for ``block_bytes``; a write publishes header + payload flits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import protocol, timestamps
+from ..kernels.tardis_lease import ops as lease_ops
+
+
+@jax.jit
+def _gather4(a, b, c, d, idx):
+    """One dispatch to slice the per-idx results out of full-table arrays
+    (ship len(idx) entries to host, not the whole block table)."""
+    return a[idx], b[idx], c[idx], d[idx]
+
+
+@dataclasses.dataclass
+class LeaseStats:
+    reads: int = 0               # blocks served through read()/renew
+    writes: int = 0              # blocks written through write()
+    read_ops: int = 0
+    write_ops: int = 0
+    expired: int = 0             # blocks whose lease had run out at read
+    renewals: int = 0            # reads where the requester held a copy
+    data_less: int = 0           # renewals answered RENEW_REP (no payload)
+    payload_transfers: int = 0   # blocks answered SH_REP with data
+    payload_bytes: int = 0
+    flits: int = 0               # total message flits incl. headers
+    rebases: int = 0
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.flits * protocol.FLIT_BYTES
+
+
+@dataclasses.dataclass
+class ReadResult:
+    """Per-block outcome of a batched read/renew, aligned with ``idx``."""
+    expired: np.ndarray          # bool: lease had run out (renewal happened)
+    renew_ok: np.ndarray         # bool: requester's version matched (no data)
+    wts: np.ndarray              # int32 block versions (unchanged by a read)
+    rts: np.ndarray              # int32 extended leases
+    new_pts: int                 # reader's program ts after consuming blocks
+
+
+class LeaseEngine:
+    """Timestamp manager for a table of ``n_blocks`` leased blocks.
+
+    ``backend="pallas"`` keeps the tables as device arrays and runs every
+    transition through the ``tardis_lease`` kernels (interpret mode anywhere
+    a TPU is absent); ``backend="numpy"`` is the bit-identical host mirror
+    kept for differential tests.
+    """
+
+    def __init__(self, n_blocks: int, lease: int = 64, *,
+                 backend: str = "pallas", ts_bits: int = 30,
+                 block_bytes: int = 0, interpret: Optional[bool] = None):
+        if backend not in ("pallas", "numpy"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.n_blocks = int(n_blocks)
+        self.lease = int(lease)
+        self.backend = backend
+        self.ts_bits = int(ts_bits)
+        self.block_bytes = int(block_bytes)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+        if backend == "pallas":
+            self._wts = jnp.zeros(self.n_blocks, jnp.int32)
+            self._rts = jnp.zeros(self.n_blocks, jnp.int32)
+        else:
+            self._wts = np.zeros(self.n_blocks, np.int32)
+            self._rts = np.zeros(self.n_blocks, np.int32)
+        self.ts_shift = 0            # cumulative rebase amount (see above)
+        self.stats = LeaseStats()
+
+    # -- table views --------------------------------------------------------
+
+    @property
+    def wts(self) -> np.ndarray:
+        return np.asarray(self._wts)
+
+    @property
+    def rts(self) -> np.ndarray:
+        return np.asarray(self._rts)
+
+    # -- protocol transitions ----------------------------------------------
+
+    def read(self, idx, pts: int, req_wts=None) -> ReadResult:
+        """Serve loads/renewals for the blocks in ``idx`` at reader ``pts``.
+
+        Every selected block's lease extends to ``max(rts, wts + lease,
+        pts + lease)`` (Table III SH_REQ); the reader's program timestamp
+        advances over the consumed versions (Table I load).  ``req_wts``
+        (aligned with ``idx``) is the requester's cached version per block;
+        matches are answered data-less (RENEW_REP).  None or -1 entries mean
+        "no cached copy" and always transfer a payload.
+        """
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        if idx.size == 0:
+            return ReadResult(np.zeros(0, bool), np.zeros(0, bool),
+                              np.zeros(0, np.int32), np.zeros(0, np.int32),
+                              int(pts))
+        mask = np.zeros(self.n_blocks, np.int32)
+        mask[idx] = 1
+        req = np.full(self.n_blocks, -1, np.int32)
+        if req_wts is not None:
+            req[idx] = np.asarray([-1 if r is None else r
+                                   for r in np.ravel(req_wts)], np.int32)
+
+        if self.backend == "pallas":
+            out = lease_ops.masked_lease_check(
+                self._wts, self._rts, jnp.asarray(req), jnp.asarray(mask),
+                np.int32(pts), np.int32(self.lease),
+                interpret=self.interpret)
+            self._rts = out["new_rts"]
+            expired, renew_ok, wts_at, rts_at = (np.asarray(x) for x in
+                _gather4(out["expired"], out["renew_ok"], self._wts,
+                         self._rts, jnp.asarray(idx)))
+            new_pts = int(out["new_pts"])
+        else:
+            m = mask.astype(bool)
+            expired_f = m & (pts > self._rts)
+            renew_f = m & (req == self._wts)
+            ext = np.maximum(np.maximum(self._rts, self._wts + self.lease),
+                             np.int32(pts + self.lease))
+            consumed = np.where(m & (pts <= self._rts), self._wts, 0)
+            self._rts = np.where(m, ext, self._rts).astype(np.int32)
+            expired = expired_f[idx]
+            renew_ok = renew_f[idx]
+            wts_at = self._wts[idx]
+            rts_at = self._rts[idx]
+            new_pts = int(max(pts, consumed.max(initial=0)))
+
+        n = int(idx.size)
+        had_copy = (req[idx] >= 0)
+        data_less = int(np.sum(renew_ok & had_copy))
+        payload = n - data_less
+        st = self.stats
+        st.read_ops += 1
+        st.reads += n
+        st.expired += int(np.sum(expired))
+        st.renewals += int(np.sum(had_copy))
+        st.data_less += data_less
+        st.payload_transfers += payload
+        st.payload_bytes += payload * self.block_bytes
+        st.flits += n * protocol.MESSAGE_FLITS["SH_REQ"]
+        st.flits += data_less * protocol.MESSAGE_FLITS["RENEW_REP"]
+        # SH_REP: header + timestamp flits, plus the block payload.
+        st.flits += payload * (protocol.MESSAGE_FLITS["RENEW_REP"]
+                               + protocol.data_flits(self.block_bytes))
+        return ReadResult(expired, renew_ok, wts_at, rts_at, new_pts)
+
+    def write(self, idx, pts: int) -> int:
+        """Writer jump-ahead over every block in ``idx`` (Table I store).
+
+        The new version's timestamp clears every outstanding read lease:
+        ``ts = max(pts, max(rts[idx]) + 1)``; each block gets wts = rts = ts.
+        No invalidation is sent to anybody.  Returns the writer's new pts.
+        """
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        if idx.size == 0:
+            return int(pts)
+        mask = np.zeros(self.n_blocks, np.int32)
+        mask[idx] = 1
+
+        if self.backend == "pallas":
+            self._wts, self._rts, ts = lease_ops.write_advance(
+                self._wts, self._rts, jnp.asarray(mask), np.int32(pts),
+                interpret=self.interpret)
+            ts = int(ts)
+        else:
+            m = mask.astype(bool)
+            top = int(np.where(m, self._rts, -1).max(initial=-1))
+            ts = max(int(pts), top + 1)
+            self._wts = np.where(m, np.int32(ts), self._wts).astype(np.int32)
+            self._rts = np.where(m, np.int32(ts), self._rts).astype(np.int32)
+
+        n = int(idx.size)
+        st = self.stats
+        st.write_ops += 1
+        st.writes += n
+        st.payload_bytes += n * self.block_bytes
+        # publish: one header flit + payload per block (DRAM_ST_REQ shape).
+        st.flits += n * (1 + protocol.data_flits(self.block_bytes))
+        return ts
+
+    # -- wraparound guard ---------------------------------------------------
+
+    def maybe_rebase(self) -> int:
+        """Shift the whole table down when timestamps approach 2**ts_bits.
+
+        Returns the shift applied (0 when none was needed).  Every caller
+        holding a program timestamp or cached ``(wts, rts)`` leases must
+        subtract the same shift; a cached lease whose rts falls below the
+        new base must be dropped (a private Shared line cannot raise its
+        rts unilaterally -- see ``timestamps.apply_rebase``).
+        """
+        if self.backend == "pallas":
+            max_ts = int(jnp.max(self._rts)) if self.n_blocks else 0
+        else:
+            max_ts = int(np.max(self._rts, initial=0))
+        if not timestamps.rebase_needed(max_ts, 0, self.ts_bits):
+            return 0
+        shift = timestamps.rebase_amount(self.ts_bits)
+        if self.backend == "pallas":
+            self._wts = jnp.maximum(self._wts - shift, 0)
+            self._rts = jnp.maximum(self._rts - shift, 0)
+        else:
+            self._wts = np.maximum(self._wts - shift, 0).astype(np.int32)
+            self._rts = np.maximum(self._rts - shift, 0).astype(np.int32)
+        self.ts_shift += shift
+        self.stats.rebases += 1
+        return shift
+
+    @staticmethod
+    def rebase_pts(pts: int, shift: int) -> int:
+        """A caller's program timestamp after an engine rebase."""
+        return max(0, int(pts) - int(shift))
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> dict:
+        st = self.stats
+        return {
+            "blocks_read": st.reads,
+            "blocks_written": st.writes,
+            "expired_leases": st.expired,
+            "renewals": st.renewals,
+            "data_less_renewals": st.data_less,
+            "payload_transfers": st.payload_transfers,
+            "payload_bytes": st.payload_bytes,
+            "wire_flits": st.flits,
+            "wire_bytes": st.wire_bytes,
+            "rebases": st.rebases,
+        }

@@ -167,6 +167,16 @@ def batched_write_advance(pts, rts, mask):
     return new_pts, new_wts, new_rts
 
 
+# 128-bit network flits (the simulator's unit of traffic accounting).
+FLIT_BYTES = 16
+
+
+def data_flits(nbytes: int) -> int:
+    """Payload flits for an arbitrary-size object (a 64B line is 4 flits;
+    multi-MB parameter shards round up the same way)."""
+    return -(-int(nbytes) // FLIT_BYTES)
+
+
 MESSAGE_FLITS = {
     # message type: header flits + timestamp flits + data flits
     # (128-bit flits; 64B line = 4 flits; one flit carries two 64b timestamps)

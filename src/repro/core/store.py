@@ -16,11 +16,13 @@ blocks, router/balance tables -- shared by many replicas:
   * livelock is avoided exactly as in the paper: replicas self-increment
     their pts every ``selfinc_period`` operations.
 
-The manager's metadata path is vectorized (numpy here; the Pallas
-``tardis_lease`` kernel implements the same rules for on-device tables) and
-the store tracks the same message statistics the simulator does, so the
-serving/elastic examples can report renewal/traffic savings vs. a
-directory-style invalidation broadcast.
+Block-table metadata lives in :class:`repro.core.lease_engine.LeaseEngine`
+(the ``tardis_lease`` Pallas kernel executes the transitions on device);
+:class:`BlockTable` below is a thin adapter over it.  The store tracks the
+same message statistics the simulator does -- including per-message flits
+from :data:`repro.core.protocol.MESSAGE_FLITS` -- so the serving/elastic
+examples can report renewal/traffic savings vs. a directory-style
+invalidation broadcast.
 """
 from __future__ import annotations
 
@@ -29,6 +31,9 @@ import threading
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
+
+from . import protocol
+from .lease_engine import LeaseEngine
 
 
 @dataclasses.dataclass
@@ -39,9 +44,15 @@ class StoreStats:
     renew_data_less: int = 0
     payload_transfers: int = 0
     bytes_transferred: int = 0
+    flits: int = 0                 # message flits incl. headers (SH_REQ/...)
     # what a full-map directory would have done for the same op stream
     dir_invalidations: int = 0
     dir_sharer_bits: int = 0
+
+    @property
+    def wire_bytes(self) -> int:
+        """On-wire bytes including metadata headers (128-bit flits)."""
+        return self.flits * protocol.FLIT_BYTES
 
 
 class TardisStore:
@@ -74,6 +85,9 @@ class TardisStore:
             self._val[key] = value
             self._nbytes[key] = int(nbytes)
             self.stats.writes += 1
+            # publish: EX_REQ header/ts flits + the new version's payload.
+            self.stats.flits += (protocol.MESSAGE_FLITS["EX_REQ"]
+                                 + protocol.data_flits(nbytes))
             # directory bookkeeping for comparison
             self.stats.dir_invalidations += len(self._sharers.get(key, ()))
             self._sharers[key] = set()
@@ -93,6 +107,7 @@ class TardisStore:
             new_rts = max(self._rts[key], wts + self.lease, pts + self.lease)
             self._rts[key] = new_rts
             self.stats.reads += 1
+            self.stats.flits += protocol.MESSAGE_FLITS["SH_REQ"]
             self._sharers.setdefault(key, set()).add(reader)
             self.stats.dir_sharer_bits = max(
                 self.stats.dir_sharer_bits,
@@ -101,9 +116,14 @@ class TardisStore:
                 self.stats.renews += 1
                 if have_wts == wts:
                     self.stats.renew_data_less += 1
+                    self.stats.flits += protocol.MESSAGE_FLITS["RENEW_REP"]
                     return None, wts, new_rts, True
+            nbytes = self._nbytes.get(key, 0)
             self.stats.payload_transfers += 1
-            self.stats.bytes_transferred += self._nbytes.get(key, 0)
+            self.stats.bytes_transferred += nbytes
+            # SH_REP: header + timestamp flits, plus the object payload.
+            self.stats.flits += (protocol.MESSAGE_FLITS["RENEW_REP"]
+                                 + protocol.data_flits(nbytes))
             return self._val[key], wts, new_rts, False
 
     def versions(self) -> Dict[str, int]:
@@ -169,28 +189,39 @@ class Replica:
         self.pts = self.store.publish(key, value, self.pts, nbytes)
         self._cache[key] = (value, self.pts, self.pts)
 
+    def cached_version(self, key: str) -> Optional[int]:
+        """The wts of this replica's cached copy (None when not cached)."""
+        ent = self._cache.get(key)
+        return ent[1] if ent is not None else None
+
 
 class BlockTable:
-    """Vectorized lease metadata for paged KV blocks (numpy mirror of the
-    ``tardis_lease`` Pallas kernel; same Table I-III rules)."""
+    """Vectorized lease metadata for paged KV blocks.
 
-    def __init__(self, n_blocks: int, lease: int = 64):
-        self.wts = np.zeros(n_blocks, np.int64)
-        self.rts = np.zeros(n_blocks, np.int64)
+    Thin adapter over :class:`repro.core.lease_engine.LeaseEngine`: the
+    Pallas ``tardis_lease`` kernel is the single source of truth for the
+    Table I-III transitions; pass ``backend="numpy"`` to run the engine's
+    host mirror instead (kept for differential tests).
+    """
+
+    def __init__(self, n_blocks: int, lease: int = 64, *,
+                 backend: str = "pallas"):
+        self.engine = LeaseEngine(n_blocks, lease=lease, backend=backend)
         self.lease = int(lease)
+
+    @property
+    def wts(self) -> np.ndarray:
+        return self.engine.wts
+
+    @property
+    def rts(self) -> np.ndarray:
+        return self.engine.rts
 
     def read_blocks(self, idx: np.ndarray, pts: int) -> Tuple[np.ndarray, int]:
         """Lease-extend a batch of blocks; returns (expired_mask, new_pts)."""
-        expired = pts > self.rts[idx]
-        self.rts[idx] = np.maximum.reduce(
-            [self.rts[idx], self.wts[idx] + self.lease,
-             np.full(len(idx), pts + self.lease, np.int64)])
-        new_pts = int(max(pts, self.wts[idx].max(initial=0)))
-        return expired, new_pts
+        res = self.engine.read(idx, pts)
+        return res.expired, res.new_pts
 
     def write_blocks(self, idx: np.ndarray, pts: int) -> int:
         """Writer jump-ahead over every block in ``idx``."""
-        ts = int(max(pts, self.rts[idx].max(initial=-1) + 1))
-        self.wts[idx] = ts
-        self.rts[idx] = ts
-        return ts
+        return self.engine.write(idx, pts)

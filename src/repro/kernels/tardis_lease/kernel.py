@@ -1,18 +1,29 @@
-"""Batched Tardis timestamp-manager rules as a Pallas TPU kernel.
+"""Batched Tardis timestamp-manager rules as Pallas TPU kernels.
 
 The TPU has no per-cacheline FSM, so the protocol's hot metadata path -- a
 timestamp manager serving thousands of lease checks / renewals / write
 jump-aheads against a block table -- becomes a lane-vectorized array program
-(DESIGN.md section 2.3).  One kernel pass over a (rows, 128) block table
-evaluates, per block:
+(DESIGN.md section 2.3).  Two kernels cover Tables I-III for a (rows, 128)
+block table, restricted to the blocks selected by an int32 ``mask``:
+
+``_lease_kernel`` (load / renew / SH_REQ path), per masked block:
 
   * expired     = pts > rts                      (Table II, shared line check)
   * renew_ok    = req_wts == wts                 (data-less RENEW_REP)
   * new_rts     = max(rts, wts + lease, pts + lease)   (Table III, SH_REQ)
-  * row max of rts                               (writer jump-ahead reduce)
+  * row max of masked rts                        (writer jump-ahead reduce)
+  * row max of consumed wts (mask & ~expired)    (reader pts advance,
+                                                  Table I load: pts<-max(pts,wts))
 
-pts/lease arrive via scalar prefetch so a serving engine can stream tables
-through the same compiled kernel.
+``_advance_kernel`` (store / jump-ahead path): given the writer's new
+timestamp ``ts = max(pts, max(masked rts) + 1)`` computed from the lease
+pass's row maxima, sets ``wts = rts = ts`` on every masked block (Table I
+store rule: the new version is valid exactly from the jump-ahead instant).
+
+pts/lease (and ts for the advance pass) arrive via scalar prefetch so a
+serving engine can stream tables through the same compiled kernels.
+Unselected blocks pass through untouched, which is also how ragged tables
+are handled: the padding lanes simply carry mask == 0.
 """
 from __future__ import annotations
 
@@ -24,47 +35,82 @@ from jax.experimental.pallas import tpu as pltpu
 LANES = 128
 
 
-def _lease_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref,
-                  new_rts_ref, flags_ref, rowmax_ref):
+def _lease_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, mask_ref,
+                  new_rts_ref, flags_ref, rowmax_rts_ref, rowmax_wts_ref):
     pts = scalars_ref[0]
     lease = scalars_ref[1]
     wts = wts_ref[...]
     rts = rts_ref[...]
     req = reqwts_ref[...]
+    mask = mask_ref[...] != 0
 
-    expired = (pts > rts).astype(jnp.int32)
-    renew_ok = (req == wts).astype(jnp.int32)
-    new_rts = jnp.maximum(jnp.maximum(rts, wts + lease), pts + lease)
+    expired = mask & (pts > rts)
+    renew_ok = mask & (req == wts)
+    ext = jnp.maximum(jnp.maximum(rts, wts + lease), pts + lease)
 
-    new_rts_ref[...] = new_rts
-    flags_ref[...] = renew_ok | (expired << 1)
-    rowmax_ref[...] = jnp.max(rts, axis=1, keepdims=True)
+    new_rts_ref[...] = jnp.where(mask, ext, rts)
+    flags_ref[...] = (renew_ok.astype(jnp.int32)
+                      | (expired.astype(jnp.int32) << 1))
+    # Writer jump-ahead operand: max rts over the selected blocks (pre-extend).
+    rowmax_rts_ref[...] = jnp.max(jnp.where(mask, rts, -1), axis=1,
+                                  keepdims=True)
+    # Reader pts advance operand: max wts over selected *readable* blocks
+    # (expired blocks renew first; their wts <= rts < pts cannot raise pts).
+    consumed = jnp.where(mask & (pts <= rts), wts, 0)
+    rowmax_wts_ref[...] = jnp.max(consumed, axis=1, keepdims=True)
 
 
-def lease_table(wts, rts, req_wts, pts, lease, *, block_rows: int = 8,
-                interpret: bool = False):
-    """wts/rts/req_wts: (R, 128) int32; pts, lease: scalars.
+def _advance_kernel(scalars_ref, wts_ref, rts_ref, mask_ref,
+                    new_wts_ref, new_rts_ref):
+    ts = scalars_ref[0]
+    mask = mask_ref[...] != 0
+    new_wts_ref[...] = jnp.where(mask, ts, wts_ref[...])
+    new_rts_ref[...] = jnp.where(mask, ts, rts_ref[...])
 
-    Returns (new_rts (R,128), flags (R,128), row_max (R,1)).
-    """
-    r, lanes = wts.shape
-    assert lanes == LANES, lanes
+
+def _grid_call(kernel, inputs, out_lanes, block_rows, interpret, scalars):
+    """Shared pallas_call plumbing for the (rows, LANES) table kernels."""
+    r = inputs[0].shape[0]
     block_rows = min(block_rows, r)
     assert r % block_rows == 0
     grid = (r // block_rows,)
     spec = pl.BlockSpec((block_rows, LANES), lambda i, _s: (i, 0))
-    scalars = jnp.stack([jnp.asarray(pts, jnp.int32),
-                         jnp.asarray(lease, jnp.int32)])
+    out_specs = [
+        spec if lanes == LANES
+        else pl.BlockSpec((block_rows, lanes), lambda i, _s: (i, 0))
+        for lanes in out_lanes]
     return pl.pallas_call(
-        _lease_kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[spec, spec, spec],
-            out_specs=[spec, spec,
-                       pl.BlockSpec((block_rows, 1), lambda i, _s: (i, 0))]),
-        out_shape=[jax.ShapeDtypeStruct((r, LANES), jnp.int32),
-                   jax.ShapeDtypeStruct((r, LANES), jnp.int32),
-                   jax.ShapeDtypeStruct((r, 1), jnp.int32)],
+            in_specs=[spec] * len(inputs),
+            out_specs=out_specs),
+        out_shape=[jax.ShapeDtypeStruct((r, lanes), jnp.int32)
+                   for lanes in out_lanes],
         interpret=interpret,
-    )(scalars, wts, rts, req_wts)
+    )(scalars, *inputs)
+
+
+def lease_table(wts, rts, req_wts, mask, pts, lease, *, block_rows: int = 8,
+                interpret: bool = False):
+    """wts/rts/req_wts/mask: (R, 128) int32; pts, lease: scalars.
+
+    Returns (new_rts (R,128), flags (R,128), rowmax_rts (R,1),
+    rowmax_wts (R,1)); flags bit0 = renew_ok, bit1 = expired, both zero
+    outside the mask.
+    """
+    assert wts.shape[1] == LANES, wts.shape
+    scalars = jnp.stack([jnp.asarray(pts, jnp.int32),
+                         jnp.asarray(lease, jnp.int32)])
+    return _grid_call(_lease_kernel, (wts, rts, req_wts, mask),
+                      (LANES, LANES, 1, 1), block_rows, interpret, scalars)
+
+
+def advance_table(wts, rts, mask, ts, *, block_rows: int = 8,
+                  interpret: bool = False):
+    """Set wts = rts = ts on every masked block; returns (new_wts, new_rts)."""
+    assert wts.shape[1] == LANES, wts.shape
+    scalars = jnp.stack([jnp.asarray(ts, jnp.int32)])
+    return _grid_call(_advance_kernel, (wts, rts, mask),
+                      (LANES, LANES), block_rows, interpret, scalars)

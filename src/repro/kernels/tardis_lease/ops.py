@@ -1,4 +1,9 @@
-"""Public wrapper: flat block tables of any size + writer jump-ahead."""
+"""Public wrappers: flat block tables of any size, masked ops, jump-ahead.
+
+``masked_lease_check`` / ``write_advance`` are the two transitions the
+:class:`repro.core.lease_engine.LeaseEngine` executes on device;
+``lease_check`` is the whole-table convenience form (mask = all blocks).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,31 +11,76 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import LANES, lease_table
+from .kernel import LANES, advance_table, lease_table
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def lease_check(wts, rts, req_wts, pts, lease, interpret: bool = False):
-    """wts/rts/req_wts: flat (N,) int32 block tables.
+def _pad2d(x, pad, fill=0):
+    return jnp.pad(x, (0, pad), constant_values=fill).reshape(-1, LANES)
 
-    Returns dict with per-block new_rts / expired / renew_ok and the
-    writer's jump-ahead timestamp max(rts)+1 over the whole table.
-    """
-    n = wts.shape[0]
-    pad = (-n) % LANES
-    wts2 = jnp.pad(wts, (0, pad)).reshape(-1, LANES)
-    rts2 = jnp.pad(rts, (0, pad), constant_values=-1).reshape(-1, LANES)
-    req2 = jnp.pad(req_wts, (0, pad)).reshape(-1, LANES)
-    rows = wts2.shape[0]
+
+def _block_rows(rows: int) -> int:
     block = 8
     while rows % block:
         block //= 2
-    new_rts, flags, rowmax = lease_table(
-        wts2, rts2, req2, pts, lease, block_rows=max(1, block),
-        interpret=interpret)
+    return max(1, block)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def masked_lease_check(wts, rts, req_wts, mask, pts, lease,
+                       interpret: bool = False):
+    """Lease-check / renew / extend the blocks selected by ``mask``.
+
+    wts/rts/req_wts/mask: flat (N,) int32 tables.  Returns dict with
+    per-block ``new_rts`` (extended only where masked), ``renew_ok`` /
+    ``expired`` flags (False outside the mask), the writer's jump-ahead
+    operand ``write_ts`` = max(masked rts) + 1, and the reader's program
+    timestamp after consuming every masked readable block, ``new_pts``.
+    """
+    n = wts.shape[0]
+    pad = (-n) % LANES
+    wts2 = _pad2d(wts, pad)
+    rts2 = _pad2d(rts, pad)
+    req2 = _pad2d(req_wts, pad)
+    mask2 = _pad2d(mask, pad)          # padding lanes carry mask == 0
+    new_rts, flags, rowmax_rts, rowmax_wts = lease_table(
+        wts2, rts2, req2, mask2, pts, lease,
+        block_rows=_block_rows(wts2.shape[0]), interpret=interpret)
     return {
         "new_rts": new_rts.reshape(-1)[:n],
         "renew_ok": (flags.reshape(-1)[:n] & 1).astype(bool),
         "expired": ((flags.reshape(-1)[:n] >> 1) & 1).astype(bool),
-        "write_ts": jnp.max(rowmax) + 1,
+        "write_ts": jnp.max(rowmax_rts) + 1,
+        "new_pts": jnp.maximum(jnp.asarray(pts, jnp.int32),
+                               jnp.max(rowmax_wts)),
     }
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def write_advance(wts, rts, mask, pts, interpret: bool = False):
+    """Writer jump-ahead over the blocks selected by ``mask``.
+
+    Two kernel passes: the lease kernel reduces max(masked rts) per row,
+    then the advance kernel sets ``wts = rts = ts`` on every masked block
+    with ``ts = max(pts, max(masked rts) + 1)`` (Table I store rule).
+    Returns (new_wts, new_rts, ts), all int32.
+    """
+    n = wts.shape[0]
+    pad = (-n) % LANES
+    wts2 = _pad2d(wts, pad)
+    rts2 = _pad2d(rts, pad)
+    mask2 = _pad2d(mask, pad)
+    rows = _block_rows(wts2.shape[0])
+    _, _, rowmax_rts, _ = lease_table(
+        wts2, rts2, wts2, mask2, 0, 0, block_rows=rows, interpret=interpret)
+    ts = jnp.maximum(jnp.asarray(pts, jnp.int32), jnp.max(rowmax_rts) + 1)
+    new_wts, new_rts = advance_table(wts2, rts2, mask2, ts, block_rows=rows,
+                                     interpret=interpret)
+    return new_wts.reshape(-1)[:n], new_rts.reshape(-1)[:n], ts
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def lease_check(wts, rts, req_wts, pts, lease, interpret: bool = False):
+    """Whole-table form: every block selected (mask of ones)."""
+    mask = jnp.ones_like(wts)
+    return masked_lease_check(wts, rts, req_wts, mask, pts, lease,
+                              interpret=interpret)

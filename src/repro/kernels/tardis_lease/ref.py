@@ -1,14 +1,38 @@
-"""Oracle: the same rules straight from repro.core.protocol."""
+"""Oracle: the same rules straight from repro.core.protocol.
+
+These are the differential-test references for the kernels: the masked
+forms compose the scalar Table I-III rules (``lease_extend``, ``renewable``,
+``shared_expired``) with the batched helpers ``batched_read_check`` /
+``batched_write_advance`` exactly as the kernel does, so outputs must be
+bit-identical int32.
+"""
 import jax.numpy as jnp
 
 from ...core import protocol as P
 
 
-def lease_check_ref(wts, rts, req_wts, pts, lease):
-    new_rts = P.lease_extend(wts, rts, pts, lease)
+def masked_lease_check_ref(wts, rts, req_wts, mask, pts, lease):
+    mask = mask != 0
+    # batched_read_check on the masked view: unselected blocks look like
+    # expired empty lines (rts = -1) so they are neither readable nor consumed.
+    readable, new_pts = P.batched_read_check(
+        pts, jnp.where(mask, wts, 0), jnp.where(mask, rts, -1))
+    del readable
     return {
-        "new_rts": new_rts,
-        "renew_ok": P.renewable(req_wts, wts),
-        "expired": P.shared_expired(pts, rts),
-        "write_ts": jnp.max(rts) + 1,
+        "new_rts": jnp.where(mask, P.lease_extend(wts, rts, pts, lease), rts),
+        "renew_ok": mask & P.renewable(req_wts, wts),
+        "expired": mask & P.shared_expired(pts, rts),
+        "write_ts": jnp.max(jnp.where(mask, rts, -1), initial=-1) + 1,
+        "new_pts": new_pts,
     }
+
+
+def write_advance_ref(wts, rts, mask, pts):
+    mask = mask != 0
+    new_pts, w, r = P.batched_write_advance(pts, rts, mask)
+    return jnp.where(mask, w, wts), jnp.where(mask, r, rts), new_pts
+
+
+def lease_check_ref(wts, rts, req_wts, pts, lease):
+    return masked_lease_check_ref(wts, rts, req_wts, jnp.ones_like(wts),
+                                  pts, lease)

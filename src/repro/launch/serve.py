@@ -22,6 +22,9 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--lease", type=int, default=8)
+    ap.add_argument("--prefix-len", type=int, default=16,
+                    help="shared system-prompt tokens (prefix-KV reuse)")
+    ap.add_argument("--prefix-block", type=int, default=8)
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
@@ -30,11 +33,15 @@ def main():
                          "exercised via tests/dry-run (needs frame inputs)")
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     cluster = ServingCluster(cfg, lambda: params, n_replicas=args.replicas,
-                             lease=args.lease, cache_len=96,
+                             lease=args.lease,
+                             prefix_block_tokens=args.prefix_block,
+                             kv_lease=16, cache_len=96,
                              selfinc_period=4)
     rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(1, cfg.vocab, rng.integers(4, 16))
-                    .astype(np.int32), max_new=args.max_new)
+    system = rng.integers(1, cfg.vocab, args.prefix_len).astype(np.int32)
+    reqs = [Request(i, np.concatenate(
+                [system, rng.integers(1, cfg.vocab, rng.integers(4, 16))
+                 .astype(np.int32)]), max_new=args.max_new)
             for i in range(args.requests)]
     done, report = cluster.run(reqs)
     print(f"served {len(done)} requests on {args.replicas} replicas "

@@ -35,6 +35,10 @@ class ElasticReport:
     data_less: int
     joins: int
     leaves: int
+    # on-wire traffic incl. metadata headers (protocol.MESSAGE_FLITS)
+    wire_flits: int = 0
+    wire_bytes: int = 0
+    payload_bytes: int = 0
 
 
 class ElasticWorker:
@@ -44,8 +48,8 @@ class ElasticWorker:
         self.grad_fn = grad_fn
 
     def step(self, batch):
-        params, wts = self.reader.read("params"), \
-            self.reader._cache["params"][1]
+        params = self.reader.read("params")
+        wts = self.reader.cached_version("params")
         loss, grads = self.grad_fn(params, batch)
         return loss, grads, wts
 
@@ -106,4 +110,5 @@ class ElasticTrainer:
             steps=steps, losses=losses, versions_used=versions,
             max_staleness=max_stale, renewals=st.renews,
             data_less=st.renew_data_less, joins=self.joins,
-            leaves=self.leaves)
+            leaves=self.leaves, wire_flits=st.flits,
+            wire_bytes=st.wire_bytes, payload_bytes=st.bytes_transferred)

@@ -3,25 +3,39 @@
 Multiple decode replicas serve requests against
   * a shared *weight version* (hot-swapped by a trainer/publisher), and
   * a shared paged prefix-KV block store (RadixAttention-style reuse),
-both coherent through the TardisStore: replicas hold leases, renew on expiry
+both coherent through Tardis leases: replicas hold leases, renew on expiry
 (data-less when unchanged -- the common case), and a weight publish never
 broadcasts: it jumps ahead of all outstanding leases.  Metadata is O(log N)
 per object; there is no sharer list in the system.
 
+Weights go through :class:`repro.core.store.TardisStore`; the prefix-KV
+block table is a :class:`repro.core.lease_engine.LeaseEngine` whose
+read/renew/write-jump-ahead transitions run in the ``tardis_lease`` Pallas
+kernel.  Prefill hashes prompt-prefix chunks to block ids (content
+addressing, CRC-chained so a block id names the *whole* prefix up to that
+chunk); blocks whose content tag matches are leased -- locally when the
+replica's lease still covers its pts, by data-less renewal when the version
+is unchanged, by payload transfer otherwise -- and new prefixes are written
+with the jump-ahead rule, evicting colliding tags without any invalidation
+(readers of the old content keep their leases, exactly the paper's stale-
+but-SC-legal window).
+
 The engine is single-process (replicas are cooperative objects) but every
-coherence message is accounted, so benchmarks can compare against a
-directory-style invalidation broadcast on the same request stream.
+coherence message is accounted in flits, so benchmarks can compare against
+a directory-style invalidation broadcast on the same request stream.
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.store import BlockTable, Replica, TardisStore
+from ..core.lease_engine import LeaseEngine
+from ..core.store import Replica, TardisStore
 from ..models import decode_step, init_cache, prefill
 
 
@@ -35,7 +49,12 @@ class Request:
 
 
 class DecodeReplica:
-    """One model replica: leased weights + local continuous batch."""
+    """One model replica: leased weights + local continuous batch.
+
+    Besides the weight lease (via ``self.reader``) the replica keeps its own
+    program timestamp ``kv_pts`` and cached ``(wts, rts)`` leases for prefix-
+    KV blocks; the cluster's LeaseEngine is their timestamp manager.
+    """
 
     def __init__(self, cfg, store: TardisStore, name: str,
                  max_batch: int = 4, cache_len: int = 256,
@@ -45,6 +64,12 @@ class DecodeReplica:
         self.reader = Replica(store, name, selfinc_period=selfinc_period)
         self.max_batch = max_batch
         self.cache_len = cache_len
+        self.kv_pts = 0
+        # bid -> (wts, rts, content_tag): the tag names WHICH prefix the
+        # cached copy holds; a lease alone says a read is SC-legal, the tag
+        # says it is the content this request wants (collision evictions
+        # re-tag blocks without invalidating anybody).
+        self.kv_leases: Dict[int, Tuple[int, int, int]] = {}
         self._decode = jax.jit(
             lambda p, c, t, i: decode_step(cfg, p, c, t, i))
         self._prefill = jax.jit(
@@ -53,6 +78,16 @@ class DecodeReplica:
     def params(self):
         """Weight access through the lease (renewal-on-expiry)."""
         return self.reader.read("params")
+
+    def rebase_kv(self, shift: int) -> None:
+        """Apply an engine rebase: shift pts/leases; drop leases whose rts
+        would fall below the new base (cannot be raised unilaterally)."""
+        if not shift:
+            return
+        self.kv_pts = max(0, self.kv_pts - shift)
+        self.kv_leases = {
+            bid: (max(0, w - shift), r - shift, t)
+            for bid, (w, r, t) in self.kv_leases.items() if r >= shift}
 
     def serve(self, reqs: List[Request]) -> List[Request]:
         """Greedy-decode a wave of requests (one continuous batch)."""
@@ -86,7 +121,9 @@ class ServingCluster:
 
     def __init__(self, cfg, init_params_fn: Callable[[], Any],
                  n_replicas: int = 2, lease: int = 10,
-                 n_prefix_blocks: int = 4096, **replica_kw):
+                 n_prefix_blocks: int = 4096, prefix_block_tokens: int = 16,
+                 kv_lease: int = 64, prefix_reuse: bool = True,
+                 **replica_kw):
         self.store = TardisStore(lease=lease)
         p0 = init_params_fn()
         nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(p0))
@@ -96,12 +133,96 @@ class ServingCluster:
         self.replicas = [
             DecodeReplica(cfg, self.store, f"replica{i}", **replica_kw)
             for i in range(n_replicas)]
-        self.prefix_blocks = BlockTable(n_prefix_blocks)
+        # paged prefix-KV metadata: one leased block per prefix chunk.
+        self.prefix_block_tokens = int(prefix_block_tokens)
+        self.prefix_reuse = bool(prefix_reuse)
+        kv_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim()
+                    * 4 * self.prefix_block_tokens)
+        self.prefix_engine = LeaseEngine(
+            n_prefix_blocks, lease=kv_lease, block_bytes=kv_bytes)
+        self._tags = np.full(n_prefix_blocks, -1, np.int64)  # content hashes
+        self.prefix_stats = {
+            "prefix_block_hits": 0, "prefix_local_hits": 0,
+            "prefix_renewals": 0, "prefix_block_misses": 0,
+            "prefix_evictions": 0, "prefix_tokens_reused": 0,
+        }
 
     def publish_weights(self, params) -> int:
         """Hot-swap: no invalidation broadcast; replicas renew on expiry."""
         self.publisher.write("params", params, nbytes=self.param_bytes)
         return self.publisher.pts
+
+    # -- prefix-KV reuse ----------------------------------------------------
+
+    def _prefix_blocks_of(self, prompt: np.ndarray) -> Tuple[List[int],
+                                                             List[int]]:
+        """Chain-hash whole prompt prefixes into (block_ids, content_tags)."""
+        bt = self.prefix_block_tokens
+        bids, tags = [], []
+        h = 0
+        for c in range(len(prompt) // bt):
+            h = zlib.crc32(np.ascontiguousarray(
+                prompt[c * bt:(c + 1) * bt]).tobytes(), h)
+            bids.append(h % self.prefix_engine.n_blocks)
+            tags.append(h)
+        return bids, tags
+
+    def _lease_prefix(self, rep: DecodeReplica, prompt: np.ndarray) -> None:
+        """Prefill-side prefix reuse for one request on one replica.
+
+        Matching blocks are leased: locally when the replica's lease still
+        covers its pts, through the engine otherwise (data-less renewal when
+        its cached version matches).  New prefixes are written with the
+        jump-ahead rule -- no invalidation reaches other replicas.
+        """
+        rep.kv_pts += 1        # per-request logical tick (paper's self-inc:
+        #                        bounds staleness and lets leases expire)
+        bids, tags = self._prefix_blocks_of(prompt)
+        ps = self.prefix_stats
+        renew_idx, renew_req, miss_idx = [], [], []
+        for bid, tag in zip(bids, tags):
+            if self._tags[bid] == tag:
+                ps["prefix_block_hits"] += 1
+                ps["prefix_tokens_reused"] += self.prefix_block_tokens
+                ent = rep.kv_leases.get(bid)
+                cached_ok = ent is not None and ent[2] == tag
+                if cached_ok and rep.kv_pts <= ent[1]:
+                    ps["prefix_local_hits"] += 1     # unexpired local lease
+                    rep.kv_pts = max(rep.kv_pts, ent[0])
+                elif bid not in renew_idx:
+                    renew_idx.append(bid)
+                    # a cached copy of DIFFERENT content can't renew
+                    renew_req.append(ent[0] if cached_ok else -1)
+            else:
+                if self._tags[bid] != -1:
+                    ps["prefix_evictions"] += 1      # collision: re-tag
+                ps["prefix_block_misses"] += 1
+                if bid not in miss_idx:
+                    miss_idx.append(bid)
+                self._tags[bid] = tag
+        if renew_idx:                                # before any jump-ahead
+            res = self.prefix_engine.read(renew_idx, rep.kv_pts,
+                                          req_wts=renew_req)
+            rep.kv_pts = res.new_pts
+            # only requests carrying a cached version are renewals; the
+            # rest are first fetches of someone else's prefix blocks
+            ps["prefix_renewals"] += sum(1 for rq in renew_req if rq >= 0)
+            for i, bid in enumerate(renew_idx):
+                rep.kv_leases[bid] = (int(res.wts[i]), int(res.rts[i]),
+                                      int(self._tags[bid]))
+        if miss_idx:
+            ts = self.prefix_engine.write(miss_idx, rep.kv_pts)
+            rep.kv_pts = ts
+            for bid in miss_idx:
+                rep.kv_leases[bid] = (ts, ts, int(self._tags[bid]))
+
+    def _maybe_rebase(self) -> None:
+        shift = self.prefix_engine.maybe_rebase()
+        if shift:
+            for rep in self.replicas:
+                rep.rebase_kv(shift)
+
+    # -- request loop -------------------------------------------------------
 
     def run(self, requests: List[Request]) -> Tuple[List[Request], Dict]:
         waves: List[List[Request]] = []
@@ -111,20 +232,39 @@ class ServingCluster:
             waves[-1].append(r)
         for i, wave in enumerate(waves):
             rep = self.replicas[i % len(self.replicas)]
+            if self.prefix_reuse:
+                for r in wave:
+                    self._lease_prefix(rep, r.prompt)
+                self._maybe_rebase()
             rep.serve(wave)
         return requests, self.coherence_report()
 
     def coherence_report(self) -> Dict[str, Any]:
         s = self.store.stats
+        e = self.prefix_engine.stats
         saved = s.renew_data_less * self.param_bytes
+        kv_saved = e.data_less * self.prefix_engine.block_bytes
+        # local hits never generate a message at all -- ledger them apart
+        local_saved = (self.prefix_stats["prefix_local_hits"]
+                       * self.prefix_engine.block_bytes)
         return {
             "reads": s.reads, "writes": s.writes,
-            "renewals": s.renews, "data_less_renewals": s.renew_data_less,
-            "payload_transfers": s.payload_transfers,
-            "bytes_transferred": s.bytes_transferred,
-            "bytes_saved_by_renewals": saved,
+            "renewals": s.renews + e.renewals,
+            "data_less_renewals": s.renew_data_less + e.data_less,
+            "payload_transfers": s.payload_transfers + e.payload_transfers,
+            "bytes_transferred": s.bytes_transferred + e.payload_bytes,
+            "bytes_saved_by_renewals": saved + kv_saved,
+            "bytes_saved_by_local_hits": local_saved,
+            "wire_flits": s.flits + e.flits,
+            "wire_bytes": s.wire_bytes + e.wire_bytes,
             "directory_would_invalidate": s.dir_invalidations,
             "directory_peak_sharers": s.dir_sharer_bits,
             "replica_local_hits": sum(r.reader.local_hits
                                       for r in self.replicas),
+            # LeaseEngine prefix-KV path
+            **self.prefix_stats,
+            "prefix_data_less_renewals": e.data_less,
+            "prefix_payload_transfers": e.payload_transfers,
+            "prefix_blocks_written": e.writes,
+            "prefix_rebases": e.rebases,
         }

@@ -12,8 +12,11 @@ from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
-from repro.kernels.tardis_lease.ops import lease_check
-from repro.kernels.tardis_lease.ref import lease_check_ref
+from repro.kernels.tardis_lease.ops import (lease_check, masked_lease_check,
+                                            write_advance)
+from repro.kernels.tardis_lease.ref import (lease_check_ref,
+                                            masked_lease_check_ref,
+                                            write_advance_ref)
 
 KEY = jax.random.PRNGKey(0)
 TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
@@ -94,6 +97,29 @@ def test_tardis_lease_kernel(n, pts, lease):
     for k in ("new_rts", "renew_ok", "expired", "write_ts"):
         np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]),
                                       err_msg=k)
+
+
+@pytest.mark.parametrize("n", [7, 128, 1000])
+@pytest.mark.parametrize("pts", [0, 55])
+def test_tardis_masked_ops(n, pts):
+    """The engine's two transitions (masked lease pass + write jump-ahead)
+    against the protocol-oracle refs, including pts advance."""
+    rng = np.random.default_rng(n + pts)
+    wts = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+    rts = jnp.maximum(wts, jnp.asarray(rng.integers(0, 120, n), jnp.int32))
+    req = jnp.where(jnp.asarray(rng.random(n) < 0.5), wts, wts - 1)
+    mask = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    out = masked_lease_check(wts, rts, req, mask, pts, 10, interpret=True)
+    ref = masked_lease_check_ref(wts, rts, req, mask, jnp.int32(pts),
+                                 jnp.int32(10))
+    for k in ("new_rts", "renew_ok", "expired", "write_ts", "new_pts"):
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]),
+                                      err_msg=k)
+    w1, r1, t1 = write_advance(wts, rts, mask, pts, interpret=True)
+    w2, r2, t2 = write_advance_ref(wts, rts, mask, jnp.int32(pts))
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    assert int(t1) == int(t2)
 
 
 def test_lease_kernel_matches_simulator_rules():

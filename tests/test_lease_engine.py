@@ -1,0 +1,244 @@
+"""LeaseEngine: kernel == numpy mirror == protocol scalar oracle.
+
+The randomized differential test drives identical op streams through the
+three implementations of Tables I-III and asserts bit-identical int32
+``wts/rts/pts`` after every op:
+
+  * the Pallas ``tardis_lease`` kernel (interpret mode) behind
+    ``LeaseEngine(backend="pallas")``,
+  * the numpy mirror behind ``backend="numpy"``,
+  * the scalar rules from ``repro.core.protocol`` applied block-by-block.
+
+Plus: int32 wraparound/rebase behaviour, flit-charged traffic accounting,
+and the serving prefix-KV reuse path end to end.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LeaseEngine, protocol as P
+from repro.core.store import BlockTable, Replica, TardisStore
+
+N_BLOCKS = 24
+LEASE = 5
+
+
+class ScalarOracle:
+    """Tables I-III applied one block at a time with the protocol scalars."""
+
+    def __init__(self, n_blocks: int, lease: int):
+        self.wts = [0] * n_blocks
+        self.rts = [0] * n_blocks
+        self.lease = lease
+
+    def read(self, idx, pts, req):
+        expired, renew_ok = [], []
+        consumed = pts
+        for b, rq in zip(idx, req):
+            expired.append(bool(P.shared_expired(pts, self.rts[b])))
+            renew_ok.append(bool(P.renewable(rq, self.wts[b])))
+            if pts <= self.rts[b]:               # readable under the lease
+                consumed = max(consumed, self.wts[b])
+        # extensions all use the requester's original pts (one batched op)
+        for b in idx:
+            self.rts[b] = int(P.lease_extend(self.wts[b], self.rts[b],
+                                             pts, self.lease))
+        return expired, renew_ok, consumed
+
+    def write(self, idx, pts):
+        ts = pts
+        for b in idx:                            # fold the Table I store rule
+            ts = int(P.store_no_cache(ts, self.wts[b], self.rts[b])[0])
+        for b in idx:                            # one atomic multi-block store
+            self.wts[b] = self.rts[b] = ts
+        return ts
+
+
+op_stream = st.lists(
+    st.tuples(st.booleans(),                          # write?
+              st.lists(st.integers(0, N_BLOCKS - 1), min_size=1, max_size=6),
+              st.integers(0, 2)),                     # req mode
+    min_size=1, max_size=10)
+
+
+@given(op_stream)
+@settings(max_examples=25, deadline=None)
+def test_differential_kernel_numpy_oracle(stream):
+    ek = LeaseEngine(N_BLOCKS, lease=LEASE, backend="pallas")
+    en = LeaseEngine(N_BLOCKS, lease=LEASE, backend="numpy")
+    orc = ScalarOracle(N_BLOCKS, LEASE)
+    pts = {"k": 0, "n": 0, "o": 0}
+    for is_write, idx, req_mode in stream:
+        idx = sorted(set(idx))
+        if is_write:
+            tk = ek.write(idx, pts["k"])
+            tn = en.write(idx, pts["n"])
+            to = orc.write(idx, pts["o"])
+            assert tk == tn == to
+            pts = dict.fromkeys(pts, tk)
+        else:
+            # req mode: 0 = no cached copy, 1 = current version (data-less
+            # renewal), 2 = stale version (payload refetch)
+            req = [-1 if req_mode == 0 else
+                   orc.wts[b] - (1 if req_mode == 2 else 0) for b in idx]
+            rk = ek.read(idx, pts["k"], req_wts=req)
+            rn = en.read(idx, pts["n"], req_wts=req)
+            exp_o, ren_o, pts_o = orc.read(idx, pts["o"], req)
+            np.testing.assert_array_equal(rk.expired, rn.expired)
+            np.testing.assert_array_equal(rk.expired, np.asarray(exp_o))
+            np.testing.assert_array_equal(rk.renew_ok, rn.renew_ok)
+            np.testing.assert_array_equal(rk.renew_ok, np.asarray(ren_o))
+            assert rk.new_pts == rn.new_pts == pts_o
+            pts = dict.fromkeys(pts, rk.new_pts)
+        np.testing.assert_array_equal(ek.wts, en.wts)
+        np.testing.assert_array_equal(ek.rts, en.rts)
+        np.testing.assert_array_equal(ek.wts, np.asarray(orc.wts, np.int32))
+        np.testing.assert_array_equal(ek.rts, np.asarray(orc.rts, np.int32))
+    assert ek.stats == en.stats                  # same flits, same renewals
+
+
+@pytest.mark.parametrize("backend", ["pallas", "numpy"])
+def test_int32_and_rebase(backend):
+    """Timestamps are int32 end to end; the ts_bits guard rebases the table
+    before the width overflows, preserving every ordering relation."""
+    eng = LeaseEngine(8, lease=4, backend=backend, ts_bits=8)
+    assert eng.wts.dtype == np.int32 and eng.rts.dtype == np.int32
+    pts = 0
+    for _ in range(60):                          # drive ts past 2**8
+        pts = eng.write([0, 1], pts)
+        pts = eng.read([0, 1, 2], pts).new_pts
+        if int(eng.rts.max()) >= (1 << 8):
+            break
+    assert int(eng.rts.max()) >= (1 << 8)
+    before_w, before_r = eng.wts.copy(), eng.rts.copy()
+    shift = eng.maybe_rebase()
+    assert shift == (1 << 7) and eng.stats.rebases == 1
+    # shifted where above the new base, clamped at zero below it
+    np.testing.assert_array_equal(eng.wts, np.maximum(before_w - shift, 0))
+    np.testing.assert_array_equal(eng.rts, np.maximum(before_r - shift, 0))
+    order = np.argsort(before_w, kind="stable")
+    assert (np.diff(eng.wts[order]) >= 0).all()  # ordering preserved
+    pts = LeaseEngine.rebase_pts(pts, shift)
+    assert pts >= 0
+    # the protocol still behaves after the rebase: write jumps every lease
+    rts2_before = int(eng.rts[2])
+    ts = eng.write([2], pts)
+    assert ts > rts2_before
+    assert int(eng.rts.max()) < (1 << 8)         # back under the width
+    # per-op guard keeps the table in-width indefinitely
+    for _ in range(200):
+        pts = eng.write([3, 4], pts)
+        pts = LeaseEngine.rebase_pts(pts, eng.maybe_rebase())
+        assert int(eng.rts.max()) < (1 << 8)
+    assert eng.stats.rebases > 1
+
+
+def test_rebase_parity_between_backends():
+    ek = LeaseEngine(8, lease=4, backend="pallas", ts_bits=8)
+    en = LeaseEngine(8, lease=4, backend="numpy", ts_bits=8)
+    pk = pn = 0
+    for _ in range(300):
+        pk, pn = ek.write([0, 3], pk), en.write([0, 3], pn)
+        sk, sn = ek.maybe_rebase(), en.maybe_rebase()
+        assert sk == sn
+        pk = LeaseEngine.rebase_pts(pk, sk)
+        pn = LeaseEngine.rebase_pts(pn, sn)
+        np.testing.assert_array_equal(ek.wts, en.wts)
+        np.testing.assert_array_equal(ek.rts, en.rts)
+    assert ek.stats.rebases > 0
+
+
+def test_block_table_is_engine_adapter():
+    bt = BlockTable(16, lease=8, backend="numpy")
+    assert bt.wts.dtype == np.int32
+    expired, pts = bt.read_blocks(np.array([0, 3]), 0)
+    assert (bt.rts[[0, 3]] >= 8).all()
+    ts = bt.write_blocks(np.array([3]), pts)
+    assert ts == int(bt.wts[3]) == int(bt.rts[3])
+    assert bt.engine.stats.reads == 2 and bt.engine.stats.writes == 1
+
+
+def test_store_charges_message_flits():
+    """bytes-on-wire include metadata headers, like the simulator's ledger."""
+    store = TardisStore(lease=4)
+    pub = Replica(store, "w")
+    pub.write("obj", b"x" * 1600, nbytes=1600)
+    flits_after_pub = store.stats.flits
+    assert flits_after_pub == P.MESSAGE_FLITS["EX_REQ"] + P.data_flits(1600)
+    r = Replica(store, "r", selfinc_period=1)
+    r.read("obj")                                # first fetch: payload
+    payload_cost = store.stats.flits - flits_after_pub
+    assert payload_cost == (P.MESSAGE_FLITS["SH_REQ"]
+                            + P.MESSAGE_FLITS["RENEW_REP"]
+                            + P.data_flits(1600))
+    for _ in range(20):                          # expiries renew data-less
+        r.read("obj")
+    renew_cost = (P.MESSAGE_FLITS["SH_REQ"] + P.MESSAGE_FLITS["RENEW_REP"])
+    assert store.stats.renew_data_less > 0
+    assert store.stats.flits < flits_after_pub + payload_cost \
+        + 20 * renew_cost + 1                    # renewals never carried data
+    assert store.stats.wire_bytes == store.stats.flits * P.FLIT_BYTES
+
+
+def test_prefix_collision_eviction_never_serves_stale_content():
+    """A collision eviction re-tags a block without invalidating anybody;
+    a replica holding an unexpired lease on the OLD content must not local-
+    hit the NEW tag (content check), only re-fetch with a payload."""
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.models import init_params
+    from repro.runtime import ServingCluster
+
+    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=2, d_model=64,
+                  vocab=128)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    cluster = ServingCluster(cfg, lambda: params, n_replicas=2,
+                             n_prefix_blocks=1,    # everything collides
+                             prefix_block_tokens=4, kv_lease=64)
+    rep_a, rep_b = cluster.replicas
+    p1 = np.arange(1, 5, dtype=np.int32)
+    p2 = np.arange(5, 9, dtype=np.int32)
+    cluster._lease_prefix(rep_a, p1)              # A writes prefix P1
+    cluster._lease_prefix(rep_a, p1)              # A renews: long lease
+    assert rep_a.kv_pts <= rep_a.kv_leases[0][1]  # lease now unexpired
+    tag1 = rep_a.kv_leases[0][2]
+    cluster._lease_prefix(rep_b, p2)              # B's P2 evicts/re-tags
+    assert cluster.prefix_stats["prefix_evictions"] == 1
+    hits_before = cluster.prefix_stats["prefix_local_hits"]
+    payload_before = cluster.prefix_engine.stats.payload_transfers
+    cluster._lease_prefix(rep_a, p2)              # A asks for P2
+    assert cluster.prefix_stats["prefix_local_hits"] == hits_before
+    assert cluster.prefix_engine.stats.payload_transfers == payload_before + 1
+    assert rep_a.kv_leases[0][2] != tag1          # cache re-tagged to P2
+
+
+def test_serving_prefix_reuse_reports_hits_and_renewals():
+    """Acceptance: a shared-prefix stream drives nonzero prefix_block_hits
+    and data-less renewals through the LeaseEngine path."""
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.models import init_params
+    from repro.runtime import Request, ServingCluster
+
+    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=2, d_model=64,
+                  vocab=128)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    cluster = ServingCluster(cfg, lambda: params, n_replicas=2, lease=6,
+                             prefix_block_tokens=8, kv_lease=4,
+                             cache_len=64, selfinc_period=2)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, cfg.vocab, 16).astype(np.int32)
+    reqs = [Request(i, np.concatenate(
+                [prefix, rng.integers(1, cfg.vocab, 8).astype(np.int32)]),
+                max_new=2) for i in range(10)]
+    done, rep = cluster.run(reqs)
+    assert all(r.done and len(r.output) == 2 for r in done)
+    assert rep["prefix_block_hits"] > 0
+    assert rep["prefix_local_hits"] > 0
+    assert rep["prefix_data_less_renewals"] > 0
+    assert rep["data_less_renewals"] > 0
+    assert rep["prefix_tokens_reused"] > 0
+    assert rep["wire_flits"] > 0
+    # reuse must beat a cold run: hits outnumber unique prefix writes
+    assert rep["prefix_block_hits"] > rep["prefix_blocks_written"]
