@@ -1,18 +1,24 @@
-"""LeaseEngine microbench: kernel vs numpy mirror, blocks/s.
+"""LeaseEngine microbench: kernel vs numpy mirror, per-wave vs per-request.
 
-Times the two hot LeaseEngine transitions -- the masked lease-check pass
+Times the hot LeaseEngine transitions -- the masked lease-check pass
 (read/renew) and the write jump-ahead -- through both backends over block
 tables of serving-realistic sizes, touching a random half of the table per
-op.  Prints the repo-standard ``name,us_per_call,derived`` CSV rows
-(benchmarks/common.py convention) with blocks/s as the derived figure.
+op, plus the per-wave batched path: a wave of B requesters sharing a
+system prompt resolved in ONE ``read_many`` dispatch vs B per-request
+``read`` dispatches (the serving cluster's old hot path).  Prints the
+repo-standard ``name,us_per_call,derived`` CSV rows (benchmarks/common.py
+convention) and writes the same numbers machine-readable to
+``BENCH_lease.json`` so the perf trajectory is trackable across PRs.
 
 On TPU the pallas backend runs the compiled kernel; on CPU it runs in
 interpret mode, so the numpy mirror wins there -- the point of the bench is
 to *record* the ratio per platform (EXPERIMENTS.md), not to assert it.
 
 Run:  PYTHONPATH=src python benchmarks/lease_bench.py [--sizes 4096,65536]
+                                                      [--json BENCH_lease.json]
 """
 import argparse
+import json
 import os
 import sys
 import time
@@ -48,8 +54,51 @@ def bench_engine(n_blocks: int, backend: str, iters: int):
         f"{blocks / dt_read:.3e} blocks/s")
     row(f"write_advance/{backend}/n{n_blocks}", dt_write * 1e6,
         f"{blocks / dt_write:.3e} blocks/s")
-    return {"read_blocks_per_s": blocks / dt_read,
+    return {"read_us": dt_read * 1e6, "write_us": dt_write * 1e6,
+            "read_blocks_per_s": blocks / dt_read,
             "write_blocks_per_s": blocks / dt_write}
+
+
+def bench_wave(n_blocks: int, backend: str, iters: int, wave: int,
+               blocks_per_req: int):
+    """A wave of ``wave`` requesters sharing the same prefix blocks:
+    one batched read_many dispatch vs ``wave`` per-request dispatches."""
+    from repro.core import LeaseEngine
+
+    from benchmarks.common import row
+
+    rng = np.random.default_rng(0)
+    shared = rng.choice(n_blocks, blocks_per_req, replace=False)
+    groups = [shared] * wave
+
+    eng_b = LeaseEngine(n_blocks, lease=64, backend=backend)
+    eng_s = LeaseEngine(n_blocks, lease=64, backend=backend)
+    req = {int(b): 0 for b in shared}
+    req_seq = [0] * blocks_per_req
+    pts = int(eng_b.read_many(groups, 0, req_wts=req).new_pts.max())
+    for g in groups:
+        eng_s.read(g, 0, req_wts=req_seq)
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pts = int(eng_b.read_many(groups, pts, req_wts=req).new_pts.max())
+    dt_wave = (time.perf_counter() - t0) / iters
+
+    pts = 0
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        for g in groups:
+            pts = eng_s.read(g, pts, req_wts=req_seq).new_pts
+    dt_seq = (time.perf_counter() - t0) / iters
+
+    row(f"wave_read_many/{backend}/n{n_blocks}/B{wave}", dt_wave * 1e6,
+        f"1 dispatch, {dt_seq / dt_wave:.2f}x vs per-request")
+    row(f"wave_per_request/{backend}/n{n_blocks}/B{wave}", dt_seq * 1e6,
+        f"{wave} dispatches")
+    return {"wave": wave, "blocks_per_req": blocks_per_req,
+            "per_wave_us": dt_wave * 1e6, "per_request_us": dt_seq * 1e6,
+            "speedup": dt_seq / dt_wave,
+            "dispatches_batched": 1, "dispatches_per_request": wave}
 
 
 def main():
@@ -61,21 +110,42 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", default="4096,16384,65536")
     ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--wave", type=int, default=8,
+                    help="requesters per wave for the batched-read bench")
+    ap.add_argument("--json", default="BENCH_lease.json",
+                    help="machine-readable output path ('' to skip)")
     args = ap.parse_args()
 
     plat = jax.default_backend()
     header(f"LeaseEngine throughput (platform={plat}; pallas backend runs "
            f"{'compiled' if plat == 'tpu' else 'in interpret mode'})")
-    results = {}
-    for n in [int(s) for s in args.sizes.split(",")]:
+    sizes = [int(s) for s in args.sizes.split(",")]
+    out = {"platform": plat, "iters": args.iters,
+           "engine": {}, "wave": {}}
+    for n in sizes:
         for backend in ("pallas", "numpy"):
-            results[(n, backend)] = bench_engine(n, backend, args.iters)
-    for n in [int(s) for s in args.sizes.split(",")]:
-        k, m = results[(n, "pallas")], results[(n, "numpy")]
+            out["engine"][f"{backend}/n{n}"] = bench_engine(
+                n, backend, args.iters)
+    header(f"per-wave batched leasing (B={args.wave} requesters sharing "
+           f"a prefix)")
+    for n in sizes:
+        for backend in ("pallas", "numpy"):
+            out["wave"][f"{backend}/n{n}"] = bench_wave(
+                n, backend, args.iters, args.wave, blocks_per_req=8)
+    for n in sizes:
+        k = out["engine"][f"pallas/n{n}"]
+        m = out["engine"][f"numpy/n{n}"]
         print(f"# n={n}: pallas/numpy read ratio "
               f"{k['read_blocks_per_s'] / m['read_blocks_per_s']:.3f}, "
               f"write ratio "
-              f"{k['write_blocks_per_s'] / m['write_blocks_per_s']:.3f}")
+              f"{k['write_blocks_per_s'] / m['write_blocks_per_s']:.3f}, "
+              f"wave speedup pallas "
+              f"{out['wave'][f'pallas/n{n}']['speedup']:.2f}x / numpy "
+              f"{out['wave'][f'numpy/n{n}']['speedup']:.2f}x")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

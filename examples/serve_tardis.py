@@ -86,6 +86,12 @@ def main():
           f"({report['prefix_tokens_reused']} tokens), "
           f"{report['prefix_data_less_renewals']} data-less renewals via "
           "the LeaseEngine kernel;")
+    print(f"=> paged-KV pool: prefill skipped "
+          f"{report['prefix_prefill_tokens_skipped']} prompt tokens "
+          f"({report['prefix_flops_saved']/1e9:.2f} GFLOPs saved) in "
+          f"{report['prefix_read_dispatches']} read + "
+          f"{report['prefix_write_dispatches']} write wave-batched engine "
+          "dispatches;")
     print(f"=> a full-map directory would have tracked "
           f"{report['directory_peak_sharers']} sharers and sent "
           f"{report['directory_would_invalidate']} invalidations.")
@@ -98,7 +104,14 @@ def main():
         assert report["prefix_data_less_renewals"] > 0, \
             "no data-less renewals on the LeaseEngine path"
         assert report["data_less_renewals"] > 0
-        print("check: serving smoke OK (prefix reuse + data-less renewals)")
+        assert report["prefix_flops_saved"] > 0, \
+            "paged-KV pool never skipped prefill on a hit"
+        assert report["prefix_kv_blocks_read"] > 0
+        # wave batching: never more engine read dispatches than waves
+        n_waves = -(-args.requests // args.replicas)
+        assert report["prefix_read_dispatches"] <= n_waves
+        print("check: serving smoke OK (prefix reuse + data-less renewals "
+              "+ paged-KV prefill skip)")
 
 
 if __name__ == "__main__":

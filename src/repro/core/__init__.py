@@ -14,9 +14,10 @@ Layers:
                                     ``tardis_lease`` Pallas kernel.
 """
 from .geometry import Geometry
-from .lease_engine import LeaseEngine, LeaseStats
+from .lease_engine import LeaseEngine, LeaseStats, ReadManyResult, ReadResult
 from .simulator import SimConfig, SimResult, simulate
 from .traces import Trace, make_trace, TRACE_GENERATORS
 
-__all__ = ["Geometry", "LeaseEngine", "LeaseStats", "SimConfig", "SimResult",
-           "simulate", "Trace", "make_trace", "TRACE_GENERATORS"]
+__all__ = ["Geometry", "LeaseEngine", "LeaseStats", "ReadManyResult",
+           "ReadResult", "SimConfig", "SimResult", "simulate", "Trace",
+           "make_trace", "TRACE_GENERATORS"]

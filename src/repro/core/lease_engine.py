@@ -28,11 +28,34 @@ Traffic is charged in message flits from :data:`repro.core.protocol
 a read is SH_REQ per block, answered by RENEW_REP (data-less, the common
 case once a reader holds the right version) or SH_REP headers plus payload
 flits for ``block_bytes``; a write publishes header + payload flits.
+
+Two extensions make leased blocks carry *real data* and make the wave the
+unit of dispatch:
+
+  * **paged KV pool** -- when constructed with ``kv_block_shape`` (the
+    serving layout is ``(chunk, 2, kv_heads, head_dim)``) the engine owns a
+    device-resident ``(n_blocks, row)`` payload pool alongside the
+    ``(wts, rts)`` metadata.  ``write_kv`` scatters block payloads in,
+    ``read_kv`` materializes them through the ``tardis_lease`` Pallas
+    gather kernel (scalar-prefetched ids drive the DMA index map), and a
+    host-side validity bitmap tracks which slots hold content for the
+    *current* tag -- ``invalidate_kv`` frees a slot on collision eviction
+    with zero messages.  ``maybe_rebase`` shifts metadata only: pool
+    contents are timestamps-free and survive any rebase untouched.
+  * **per-wave batched ops** -- ``read_many`` resolves the reads/renewals
+    of a whole wave of requesters in ONE ``masked_lease_check_many`` kernel
+    dispatch (the multi-row mask path), and ``write_many`` folds a wave's
+    writes into one jump-ahead over the union of their blocks.  With every
+    requester at the same program timestamp (the serving case: one logical
+    tick per wave) the batched results are bit-identical in ``wts/rts/pts``
+    to issuing the per-request ops back to back (``tests/test_litmus.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +72,18 @@ def _gather4(a, b, c, d, idx):
     return a[idx], b[idx], c[idx], d[idx]
 
 
+@jax.jit
+def _gather_many(expired, renew_ok, wts, rts, idx):
+    """read_many's per-union-block slice: flags are (G, N), tables (N,)."""
+    return expired[:, idx], renew_ok[:, idx], wts[idx], rts[idx]
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(pool, idx, rows):
+    """In-place pool update (donated buffer: no full-pool copy on TPU)."""
+    return pool.at[idx].set(rows.astype(pool.dtype))
+
+
 @dataclasses.dataclass
 class LeaseStats:
     reads: int = 0               # blocks served through read()/renew
@@ -62,6 +97,9 @@ class LeaseStats:
     payload_bytes: int = 0
     flits: int = 0               # total message flits incl. headers
     rebases: int = 0
+    kv_blocks_written: int = 0   # payload blocks scattered into the pool
+    kv_blocks_read: int = 0      # payload blocks gathered out of the pool
+    kv_evictions: int = 0        # pool slots freed by invalidate_kv
 
     @property
     def wire_bytes(self) -> int:
@@ -78,6 +116,24 @@ class ReadResult:
     new_pts: int                 # reader's program ts after consuming blocks
 
 
+@dataclasses.dataclass
+class ReadManyResult:
+    """Outcome of a per-wave batched read: one kernel dispatch for G groups.
+
+    ``union_idx`` is the sorted union of the groups' block ids; ``wts`` /
+    ``rts`` align with it.  ``expired`` / ``renew_ok`` are (G, len(union))
+    per-group flags evaluated against the pre-call table (the wave's shared
+    snapshot; False outside a group's own blocks) and ``new_pts`` is the
+    (G,) per-group reader timestamp after consuming its readable blocks.
+    """
+    union_idx: np.ndarray
+    expired: np.ndarray
+    renew_ok: np.ndarray
+    wts: np.ndarray
+    rts: np.ndarray
+    new_pts: np.ndarray
+
+
 class LeaseEngine:
     """Timestamp manager for a table of ``n_blocks`` leased blocks.
 
@@ -89,7 +145,9 @@ class LeaseEngine:
 
     def __init__(self, n_blocks: int, lease: int = 64, *,
                  backend: str = "pallas", ts_bits: int = 30,
-                 block_bytes: int = 0, interpret: Optional[bool] = None):
+                 block_bytes: int = 0, interpret: Optional[bool] = None,
+                 kv_block_shape: Optional[Sequence[int]] = None,
+                 kv_dtype=jnp.bfloat16):
         if backend not in ("pallas", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
         self.n_blocks = int(n_blocks)
@@ -108,6 +166,23 @@ class LeaseEngine:
             self._rts = np.zeros(self.n_blocks, np.int32)
         self.ts_shift = 0            # cumulative rebase amount (see above)
         self.stats = LeaseStats()
+        # paged KV payload pool: one row per block, lane-padded so the
+        # gather kernel DMAs aligned rows.  The validity bitmap is host
+        # metadata (whether a slot holds content for its current tag), NOT
+        # protocol state -- it carries no timestamps and never rebases.
+        self.kv_block_shape = (tuple(int(s) for s in kv_block_shape)
+                               if kv_block_shape else None)
+        if self.kv_block_shape:
+            self._kv_elems = int(np.prod(self.kv_block_shape))
+            lanes = lease_ops.LANES
+            self._kv_row = -(-self._kv_elems // lanes) * lanes
+            if backend == "pallas":
+                self._kv_pool = jnp.zeros((self.n_blocks, self._kv_row),
+                                          kv_dtype)
+            else:
+                self._kv_pool = np.zeros((self.n_blocks, self._kv_row),
+                                         np.dtype(kv_dtype))
+            self._kv_valid = np.zeros(self.n_blocks, bool)
 
     # -- table views --------------------------------------------------------
 
@@ -118,6 +193,67 @@ class LeaseEngine:
     @property
     def rts(self) -> np.ndarray:
         return np.asarray(self._rts)
+
+    # -- paged KV pool ------------------------------------------------------
+
+    @property
+    def has_kv(self) -> bool:
+        return self.kv_block_shape is not None
+
+    def kv_ok(self, bid: int) -> bool:
+        """True when the pool slot holds content for the block's current
+        tag (set by write_kv, cleared by invalidate_kv)."""
+        return bool(self.has_kv and self._kv_valid[bid])
+
+    def kv_valid_count(self) -> int:
+        return int(self._kv_valid.sum()) if self.has_kv else 0
+
+    def write_kv(self, idx, blocks) -> None:
+        """Scatter payloads into the pool: blocks (n, *kv_block_shape)."""
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        if not idx.size:
+            return
+        pad = ((0, 0), (0, self._kv_row - self._kv_elems))
+        if self.backend == "pallas":
+            flat = jnp.pad(jnp.asarray(blocks).reshape(idx.size,
+                                                       self._kv_elems), pad)
+            with warnings.catch_warnings():
+                # CPU XLA can't honor the donation; the TPU path does
+                warnings.filterwarnings("ignore", message=".*donated.*")
+                self._kv_pool = _scatter_rows(self._kv_pool,
+                                              jnp.asarray(idx), flat)
+        else:
+            flat = np.pad(np.asarray(blocks).reshape(idx.size,
+                                                     self._kv_elems), pad)
+            self._kv_pool[idx] = flat.astype(self._kv_pool.dtype)
+        self._kv_valid[idx] = True
+        self.stats.kv_blocks_written += int(idx.size)
+
+    def read_kv(self, idx):
+        """Materialize pool payloads for leased block ids via the Pallas
+        gather kernel; returns (n, *kv_block_shape)."""
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        if not idx.size:
+            return np.zeros((0,) + self.kv_block_shape,
+                            np.asarray(self._kv_pool[:0]).dtype)
+        if self.backend == "pallas":
+            rows = lease_ops.gather_blocks(
+                self._kv_pool, jnp.asarray(idx, jnp.int32),
+                interpret=self.interpret)
+        else:
+            rows = self._kv_pool[idx]
+        self.stats.kv_blocks_read += int(idx.size)
+        return rows[:, :self._kv_elems].reshape(
+            (idx.size,) + self.kv_block_shape)
+
+    def invalidate_kv(self, idx) -> None:
+        """Free pool slots on collision eviction (re-tag): the content no
+        longer matches the slot's tag.  Zero messages -- readers holding
+        leases on the old content keep their private copies."""
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        freed = int(self._kv_valid[idx].sum())
+        self._kv_valid[idx] = False
+        self.stats.kv_evictions += freed
 
     # -- protocol transitions ----------------------------------------------
 
@@ -185,6 +321,124 @@ class LeaseEngine:
         st.flits += payload * (protocol.MESSAGE_FLITS["RENEW_REP"]
                                + protocol.data_flits(self.block_bytes))
         return ReadResult(expired, renew_ok, wts_at, rts_at, new_pts)
+
+    def read_many(self, groups: Sequence, pts,
+                  req_wts: Optional[Union[Dict[int, int], Sequence]] = None
+                  ) -> ReadManyResult:
+        """Per-wave batched read: G requester groups, ONE kernel dispatch.
+
+        ``groups`` is a list of per-requester block-id sequences (they may
+        overlap -- a wave sharing a system prompt names the same blocks G
+        times and still costs a single masked-lease pass).  ``pts`` is a
+        scalar (the wave's shared program timestamp, the serving case) or a
+        (G,) vector.  ``req_wts`` maps block id -> the requesters' cached
+        version (a dict, or an array aligned with the sorted union); the
+        wave shares one requester-side cache, so it is per-block.
+
+        With a shared ``pts``, the table state and ``max(new_pts)`` are
+        bit-identical to issuing the G reads sequentially at that pts (the
+        per-group Table III extensions commute); per-group flags are
+        evaluated against the pre-call snapshot.
+        """
+        groups = [np.atleast_1d(np.asarray(g, np.int64)) for g in groups]
+        n_groups = len(groups)
+        pts_vec = np.broadcast_to(np.asarray(pts, np.int32),
+                                  (n_groups,)).copy()
+        union = sorted({int(b) for g in groups for b in g})
+        if not union:
+            return ReadManyResult(
+                np.zeros(0, np.int64), np.zeros((n_groups, 0), bool),
+                np.zeros((n_groups, 0), bool), np.zeros(0, np.int32),
+                np.zeros(0, np.int32), pts_vec)
+        union_idx = np.asarray(union, np.int64)
+        # the serving hot case is a wave of identical requesters (shared
+        # system prompt): collapse duplicate (blocks, pts) rows so the
+        # kernel runs one mask row per DISTINCT requester, and per-group
+        # results fan back out (also keeps the traced G small and stable).
+        row_of, ukeys = [], {}
+        for g, idx in enumerate(groups):
+            key = (tuple(sorted({int(b) for b in idx})), int(pts_vec[g]))
+            row_of.append(ukeys.setdefault(key, len(ukeys)))
+        row_of = np.asarray(row_of)
+        n_rows = len(ukeys)
+        pts_rows = np.asarray([k[1] for k in ukeys], np.int32)
+        masks = np.zeros((n_rows, self.n_blocks), np.int32)
+        for key, row in ukeys.items():
+            masks[row, list(key[0])] = 1
+        req = np.full(self.n_blocks, -1, np.int32)
+        if req_wts is not None:
+            if isinstance(req_wts, dict):
+                for bid, w in req_wts.items():
+                    req[bid] = -1 if w is None else int(w)
+            else:
+                req[union_idx] = np.asarray(
+                    [-1 if r is None else r for r in np.ravel(req_wts)],
+                    np.int32)
+
+        if self.backend == "pallas":
+            out = lease_ops.masked_lease_check_many(
+                self._wts, self._rts, jnp.asarray(req), jnp.asarray(masks),
+                jnp.asarray(pts_rows), np.int32(self.lease),
+                interpret=self.interpret)
+            self._rts = out["new_rts"]
+            expired, renew_ok, wts_at, rts_at = (np.asarray(x) for x in
+                _gather_many(out["expired"], out["renew_ok"], self._wts,
+                             self._rts, jnp.asarray(union_idx)))
+            new_pts = np.asarray(out["new_pts"])
+        else:
+            m = masks.astype(bool)
+            rts0 = self._rts
+            expired_f = m & (pts_rows[:, None] > rts0[None, :])
+            renew_f = m & (req[None, :] == self._wts[None, :])
+            new_rts = rts0
+            new_pts = pts_rows.copy()
+            for g in range(n_rows):
+                ext = np.maximum(
+                    np.maximum(rts0, self._wts + self.lease),
+                    np.int32(pts_rows[g] + self.lease))
+                new_rts = np.where(m[g], np.maximum(new_rts, ext), new_rts)
+                consumed = np.where(m[g] & (pts_rows[g] <= rts0),
+                                    self._wts, 0)
+                new_pts[g] = max(int(pts_rows[g]),
+                                 int(consumed.max(initial=0)))
+            self._rts = new_rts.astype(np.int32)
+            expired = expired_f[:, union_idx]
+            renew_ok = renew_f[:, union_idx]
+            wts_at = self._wts[union_idx]
+            rts_at = self._rts[union_idx]
+        expired = expired[row_of]              # fan the distinct-row results
+        renew_ok = renew_ok[row_of]            # back out to the G groups
+        new_pts = new_pts[row_of]
+
+        n = int(union_idx.size)
+        had_copy = (req[union_idx] >= 0)
+        renew_u = renew_ok.any(axis=0)
+        data_less = int(np.sum(renew_u & had_copy))
+        payload = n - data_less
+        st = self.stats
+        st.read_ops += 1             # the whole wave: one dispatch
+        st.reads += n
+        st.expired += int(np.sum(expired.any(axis=0)))
+        st.renewals += int(np.sum(had_copy))
+        st.data_less += data_less
+        st.payload_transfers += payload
+        st.payload_bytes += payload * self.block_bytes
+        st.flits += n * protocol.MESSAGE_FLITS["SH_REQ"]
+        st.flits += data_less * protocol.MESSAGE_FLITS["RENEW_REP"]
+        st.flits += payload * (protocol.MESSAGE_FLITS["RENEW_REP"]
+                               + protocol.data_flits(self.block_bytes))
+        return ReadManyResult(union_idx, expired, renew_ok, wts_at, rts_at,
+                              new_pts)
+
+    def write_many(self, groups: Sequence, pts: int) -> int:
+        """Per-wave batched write: the union of the groups' blocks gets ONE
+        jump-ahead (one logical tick for the whole wave), replacing G
+        full-table dispatch pairs.  Returns the wave's new pts."""
+        union = sorted({int(b) for g in groups
+                        for b in np.atleast_1d(np.asarray(g, np.int64))})
+        if not union:
+            return int(pts)
+        return self.write(np.asarray(union, np.int64), pts)
 
     def write(self, idx, pts: int) -> int:
         """Writer jump-ahead over every block in ``idx`` (Table I store).
@@ -260,6 +514,11 @@ class LeaseEngine:
         return {
             "blocks_read": st.reads,
             "blocks_written": st.writes,
+            "read_ops": st.read_ops,
+            "write_ops": st.write_ops,
+            "kv_blocks_written": st.kv_blocks_written,
+            "kv_blocks_read": st.kv_blocks_read,
+            "kv_evictions": st.kv_evictions,
             "expired_leases": st.expired,
             "renewals": st.renewals,
             "data_less_renewals": st.data_less,

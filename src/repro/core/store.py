@@ -205,8 +205,9 @@ class BlockTable:
     """
 
     def __init__(self, n_blocks: int, lease: int = 64, *,
-                 backend: str = "pallas"):
-        self.engine = LeaseEngine(n_blocks, lease=lease, backend=backend)
+                 backend: str = "pallas", kv_block_shape=None):
+        self.engine = LeaseEngine(n_blocks, lease=lease, backend=backend,
+                                  kv_block_shape=kv_block_shape)
         self.lease = int(lease)
 
     @property
@@ -225,3 +226,13 @@ class BlockTable:
     def write_blocks(self, idx: np.ndarray, pts: int) -> int:
         """Writer jump-ahead over every block in ``idx``."""
         return self.engine.write(idx, pts)
+
+    def read_blocks_many(self, groups, pts: int) -> Tuple[np.ndarray, int]:
+        """Per-wave batched form: G overlapping groups, one kernel dispatch.
+        Returns (per-group expired flags over the union, the wave's pts)."""
+        res = self.engine.read_many(groups, pts)
+        return res.expired, int(res.new_pts.max(initial=pts))
+
+    def write_blocks_many(self, groups, pts: int) -> int:
+        """One jump-ahead over the union of the groups' blocks."""
+        return self.engine.write_many(groups, pts)

@@ -20,6 +20,21 @@ timestamp ``ts = max(pts, max(masked rts) + 1)`` computed from the lease
 pass's row maxima, sets ``wts = rts = ts`` on every masked block (Table I
 store rule: the new version is valid exactly from the jump-ahead instant).
 
+``_lease_many_kernel`` is the **multi-row mask path**: a wave of G
+requesters, each selecting its own subset of the table (mask row g) at its
+own program timestamp ``pts_g``, resolved in ONE pass.  Per-group flags and
+pts-advance operands come back stacked on a leading G axis; the rts
+extension is the union over selecting groups (``max_g`` of the per-group
+Table III extensions -- order-independent, so the batched result is
+bit-identical to issuing the G lease passes back to back).  Flags are
+evaluated against the *pre-call* table, which is the wave semantics: every
+requester of the wave observes the same table snapshot.
+
+``_gather_kernel`` is the paged-KV materialization path: scalar-prefetched
+block ids drive the input index map directly (the classic paged-attention
+gather), so leased KV chunks stream from the pool into a replica's cache
+without a host round-trip.
+
 pts/lease (and ts for the advance pass) arrive via scalar prefetch so a
 serving engine can stream tables through the same compiled kernels.
 Unselected blocks pass through untouched, which is also how ragged tables
@@ -58,6 +73,34 @@ def _lease_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, mask_ref,
     # (expired blocks renew first; their wts <= rts < pts cannot raise pts).
     consumed = jnp.where(mask & (pts <= rts), wts, 0)
     rowmax_wts_ref[...] = jnp.max(consumed, axis=1, keepdims=True)
+
+
+def _lease_many_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, masks_ref,
+                       new_rts_ref, flags_ref, rowmax_rts_ref,
+                       rowmax_wts_ref):
+    lease = scalars_ref[0]
+    wts = wts_ref[...]
+    rts = rts_ref[...]
+    req = reqwts_ref[...]
+    n_groups = masks_ref.shape[0]
+
+    union = jnp.zeros_like(wts)
+    new_rts = rts
+    for g in range(n_groups):           # static: unrolled over the wave
+        pts = scalars_ref[1 + g]
+        mask = masks_ref[g] != 0
+        expired = mask & (pts > rts)
+        renew_ok = mask & (req == wts)
+        ext = jnp.maximum(jnp.maximum(rts, wts + lease), pts + lease)
+        new_rts = jnp.where(mask, jnp.maximum(new_rts, ext), new_rts)
+        union = jnp.where(mask, 1, union)
+        flags_ref[g, ...] = (renew_ok.astype(jnp.int32)
+                             | (expired.astype(jnp.int32) << 1))
+        consumed = jnp.where(mask & (pts <= rts), wts, 0)
+        rowmax_wts_ref[g, ...] = jnp.max(consumed, axis=1, keepdims=True)
+    new_rts_ref[...] = new_rts
+    rowmax_rts_ref[...] = jnp.max(jnp.where(union != 0, rts, -1), axis=1,
+                                  keepdims=True)
 
 
 def _advance_kernel(scalars_ref, wts_ref, rts_ref, mask_ref,
@@ -114,3 +157,75 @@ def advance_table(wts, rts, mask, ts, *, block_rows: int = 8,
     scalars = jnp.stack([jnp.asarray(ts, jnp.int32)])
     return _grid_call(_advance_kernel, (wts, rts, mask),
                       (LANES, LANES), block_rows, interpret, scalars)
+
+
+def lease_table_many(wts, rts, req_wts, masks, pts_vec, lease, *,
+                     block_rows: int = 8, interpret: bool = False):
+    """Multi-row mask path: one pass over G per-group masks.
+
+    wts/rts/req_wts: (R, 128) int32; masks: (G, R, 128) int32;
+    pts_vec: (G,) int32 per-group program timestamps; lease: scalar.
+
+    Returns (new_rts (R,128) -- union extension, flags (G,R,128) -- bit0
+    renew_ok / bit1 expired per group vs the pre-call table, rowmax_rts
+    (R,1) over the union mask, rowmax_wts (G,R,1) per-group consumed
+    maxima for the readers' pts advance).
+    """
+    assert wts.shape[1] == LANES, wts.shape
+    g, r = masks.shape[0], wts.shape[0]
+    assert masks.shape == (g, r, LANES), masks.shape
+    scalars = jnp.concatenate([jnp.asarray([lease], jnp.int32),
+                               jnp.asarray(pts_vec, jnp.int32)])
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0
+    grid = (r // block_rows,)
+    spec2 = pl.BlockSpec((block_rows, LANES), lambda i, _s: (i, 0))
+    spec3 = pl.BlockSpec((g, block_rows, LANES), lambda i, _s: (0, i, 0))
+    return pl.pallas_call(
+        _lease_many_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[spec2, spec2, spec2, spec3],
+            out_specs=[
+                spec2,                                        # new_rts
+                spec3,                                        # flags
+                pl.BlockSpec((block_rows, 1), lambda i, _s: (i, 0)),
+                pl.BlockSpec((g, block_rows, 1), lambda i, _s: (0, i, 0)),
+            ]),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((g, r, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((g, r, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scalars, wts, rts, req_wts, masks)
+
+
+def _gather_kernel(idx_ref, pool_ref, out_ref):
+    del idx_ref                      # consumed by the input index map
+    out_ref[...] = pool_ref[...]
+
+
+def gather_rows(pool, idx, *, interpret: bool = False):
+    """Gather ``pool[idx]`` rows on device: pool (N, W), idx (n,) int32.
+
+    The scalar-prefetched ids drive the input BlockSpec's index map, so each
+    grid step DMAs exactly one leased block's payload row -- the paged-KV
+    materialization path of the serving engine.  W should be a multiple of
+    128 lanes (the LeaseEngine pads its pool rows).
+    """
+    n = idx.shape[0]
+    width = pool.shape[1]
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[pl.BlockSpec((1, width),
+                                   lambda i, idx_ref: (idx_ref[i], 0))],
+            out_specs=pl.BlockSpec((1, width), lambda i, _idx: (i, 0))),
+        out_shape=jax.ShapeDtypeStruct((n, width), pool.dtype),
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), pool)

@@ -3,6 +3,9 @@
 ``masked_lease_check`` / ``write_advance`` are the two transitions the
 :class:`repro.core.lease_engine.LeaseEngine` executes on device;
 ``lease_check`` is the whole-table convenience form (mask = all blocks).
+``masked_lease_check_many`` is the per-wave batched form (G mask rows, one
+kernel pass) and ``gather_blocks`` materializes paged-KV pool rows for a
+set of leased block ids.
 """
 from __future__ import annotations
 
@@ -11,7 +14,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import LANES, advance_table, lease_table
+from .kernel import (LANES, advance_table, gather_rows, lease_table,
+                     lease_table_many)
 
 
 def _pad2d(x, pad, fill=0):
@@ -56,6 +60,40 @@ def masked_lease_check(wts, rts, req_wts, mask, pts, lease,
 
 
 @partial(jax.jit, static_argnames=("interpret",))
+def masked_lease_check_many(wts, rts, req_wts, masks, pts_vec, lease,
+                            interpret: bool = False):
+    """Per-wave batched lease check: G mask rows resolved in one pass.
+
+    wts/rts/req_wts: flat (N,) int32 tables; masks: (G, N) int32 -- one row
+    per requester of the wave; pts_vec: (G,) int32 program timestamps.
+    Returns per-block ``new_rts`` (the union of the per-group Table III
+    extensions), per-group ``renew_ok`` / ``expired`` flags (G, N) evaluated
+    against the pre-call table (the wave's shared snapshot), the writer's
+    jump-ahead operand ``write_ts`` over the union mask, and per-group
+    reader timestamps ``new_pts`` (G,).
+    """
+    n = wts.shape[0]
+    g = masks.shape[0]
+    pad = (-n) % LANES
+    wts2 = _pad2d(wts, pad)
+    rts2 = _pad2d(rts, pad)
+    req2 = _pad2d(req_wts, pad)
+    masks2 = jnp.pad(masks, ((0, 0), (0, pad))).reshape(g, -1, LANES)
+    new_rts, flags, rowmax_rts, rowmax_wts = lease_table_many(
+        wts2, rts2, req2, masks2, pts_vec, lease,
+        block_rows=_block_rows(wts2.shape[0]), interpret=interpret)
+    flags_flat = flags.reshape(g, -1)[:, :n]
+    return {
+        "new_rts": new_rts.reshape(-1)[:n],
+        "renew_ok": (flags_flat & 1).astype(bool),
+        "expired": ((flags_flat >> 1) & 1).astype(bool),
+        "write_ts": jnp.max(rowmax_rts) + 1,
+        "new_pts": jnp.maximum(jnp.asarray(pts_vec, jnp.int32),
+                               jnp.max(rowmax_wts, axis=(1, 2))),
+    }
+
+
+@partial(jax.jit, static_argnames=("interpret",))
 def write_advance(wts, rts, mask, pts, interpret: bool = False):
     """Writer jump-ahead over the blocks selected by ``mask``.
 
@@ -84,3 +122,9 @@ def lease_check(wts, rts, req_wts, pts, lease, interpret: bool = False):
     mask = jnp.ones_like(wts)
     return masked_lease_check(wts, rts, req_wts, mask, pts, lease,
                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gather_blocks(pool, idx, interpret: bool = False):
+    """Materialize pool rows for leased block ids: pool (N, W), idx (n,)."""
+    return gather_rows(pool, idx, interpret=interpret)

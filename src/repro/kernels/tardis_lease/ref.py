@@ -27,6 +27,34 @@ def masked_lease_check_ref(wts, rts, req_wts, mask, pts, lease):
     }
 
 
+def masked_lease_check_many_ref(wts, rts, req_wts, masks, pts_vec, lease):
+    """Oracle for the multi-row mask path: the per-group scalar rules
+    composed exactly as the batched kernel does -- flags and consumed maxima
+    against the pre-call table, rts extended by the union (max over groups)
+    of the per-group Table III extensions."""
+    masks = masks != 0
+    union = jnp.any(masks, axis=0)
+    new_rts = rts
+    expired, renew_ok, new_pts = [], [], []
+    for g in range(masks.shape[0]):
+        m, pts = masks[g], pts_vec[g]
+        expired.append(m & P.shared_expired(pts, rts))
+        renew_ok.append(m & P.renewable(req_wts, wts))
+        _, npts = P.batched_read_check(
+            pts, jnp.where(m, wts, 0), jnp.where(m, rts, -1))
+        new_pts.append(npts)
+        new_rts = jnp.where(
+            m, jnp.maximum(new_rts, P.lease_extend(wts, rts, pts, lease)),
+            new_rts)
+    return {
+        "new_rts": new_rts,
+        "renew_ok": jnp.stack(renew_ok),
+        "expired": jnp.stack(expired),
+        "write_ts": jnp.max(jnp.where(union, rts, -1), initial=-1) + 1,
+        "new_pts": jnp.stack(new_pts),
+    }
+
+
 def write_advance_ref(wts, rts, mask, pts):
     mask = mask != 0
     new_pts, w, r = P.batched_write_advance(pts, rts, mask)

@@ -48,6 +48,10 @@ def main():
           f"({args.arch} reduced)")
     for k, v in report.items():
         print(f"  {k:28s} {v}")
+    if report["prefix_prefill_tokens_skipped"]:
+        print(f"paged-KV pool: prefill skipped "
+              f"{report['prefix_prefill_tokens_skipped']} prompt tokens, "
+              f"{report['prefix_flops_saved']/1e9:.2f} GFLOPs saved")
 
 
 if __name__ == "__main__":

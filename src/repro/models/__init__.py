@@ -1,7 +1,8 @@
 """Model zoo: every assigned architecture family as pure-functional JAX."""
 from .transformer import (abstract_params, forward, init_params, logits_fn,
                           loss_fn)
-from .decoding import decode_step, init_cache, prefill
+from .decoding import decode_step, init_cache, prefill, prefill_suffix
 
 __all__ = ["abstract_params", "forward", "init_params", "logits_fn",
-           "loss_fn", "decode_step", "init_cache", "prefill"]
+           "loss_fn", "decode_step", "init_cache", "prefill",
+           "prefill_suffix"]

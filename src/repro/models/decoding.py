@@ -18,7 +18,8 @@ from .layers import rmsnorm, swiglu
 from .moe import moe_apply
 from .ssm import ssm_block
 from .transformer import (Params, _embed, _head, attn_decode, attn_prefill,
-                          cross_apply, enc_kv_of, logits_fn)
+                          attn_prefill_cached, cross_apply, enc_kv_of,
+                          logits_fn)
 
 Cache = Dict[str, Any]
 
@@ -233,6 +234,40 @@ def prefill(cfg: ArchConfig, p: Params, batch, cache_len: int,
     x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
     logits = logits_fn(cfg, p, x[:, -1:])
     return cache, logits
+
+
+def prefill_suffix(cfg: ArchConfig, p: Params, batch, cache: Cache,
+                   prefix_len: int) -> Tuple[Cache, jnp.ndarray]:
+    """Chunked prefill that skips the prompt's leased prefix.
+
+    ``cache`` arrives with its first ``prefix_len`` slots already holding
+    the prefix KV (materialized from the serving engine's paged pool);
+    ``batch["tokens"]`` carries only the suffix.  Each suffix query attends
+    over [leased prefix KV; its own causal suffix KV], so the prefix's
+    attention + MLP flops are skipped entirely.  Attention-cache families
+    only (an SSM state is not position-addressable block-wise).
+    """
+    fam = cfg.family
+    if fam not in ("dense", "vlm"):
+        raise NotImplementedError(
+            f"prefix-KV suffix prefill supports attention-cache families, "
+            f"not {fam!r}")
+    x = _embed(cfg, p, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(
+        prefix_len + jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(xx, xs):
+        layer, kc, vc = xs
+        y, kc, vc = attn_prefill_cached(layer["attn"], cfg, xx, positions,
+                                        kc, vc, prefix_len)
+        xx = xx + y
+        xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+        return xx + swiglu(layer["mlp"], xn), (kc, vc)
+
+    x, (k, v) = jax.lax.scan(body, x, (p["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return {"k": k, "v": v}, logits_fn(cfg, p, x[:, -1:])
 
 
 def _encdec_prefill(cfg, p, batch, cache_len, dtype=jnp.bfloat16):

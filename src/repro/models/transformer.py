@@ -86,6 +86,29 @@ def attn_prefill(p, cfg, x, positions, cache_len: int):
     return y, (kc, vc)
 
 
+def attn_prefill_cached(p, cfg, x, positions, kc, vc, prefix_len: int):
+    """Chunked prefill against a partially-filled cache.
+
+    The first ``prefix_len`` cache slots already hold leased prefix KV
+    (RoPE'd at their absolute positions, so any request sharing the prefix
+    reuses them verbatim); only the suffix queries/KV are computed here.
+    ``positions`` must start at ``prefix_len``.  Returns (y, kc, vc).
+    """
+    b, s, _ = x.shape
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, xn)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope)
+    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                      (0, prefix_len, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                      (0, prefix_len, 0, 0))
+    out = attend(q, kc, vc, causal=True, q_offset=prefix_len,
+                 window=cfg.sliding_window, kv_len=prefix_len + s)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+    return y, kc, vc
+
+
 def attn_decode(p, cfg, x, kc, vc, cur_idx):
     """One-token decode: insert k/v at cur_idx, attend over cache."""
     b = x.shape[0]

@@ -20,6 +20,17 @@ with the jump-ahead rule, evicting colliding tags without any invalidation
 (readers of the old content keep their leases, exactly the paper's stale-
 but-SC-legal window).
 
+Leased blocks carry the *actual* paged KV tensors: the engine's pool holds
+one ``(chunk, 2, n_layers*kv_heads, head_dim)`` payload per block, filled
+by write-back after a wave prefills a new prefix and materialized through
+the Pallas gather kernel when a later wave hits -- prefill then runs only
+the suffix (``models.prefill_suffix``), skipping the prefix's attention and
+MLP entirely (``prefix_flops_saved`` in the coherence report).  The lease
+protocol itself is batched per wave: one logical tick, one
+``read_many`` kernel dispatch for every renewal in the wave and at most one
+jump-ahead write over the union of its misses, instead of per-request
+full-table passes.
+
 The engine is single-process (replicas are cooperative objects) but every
 coherence message is accounted in flits, so benchmarks can compare against
 a directory-style invalidation broadcast on the same request stream.
@@ -36,7 +47,11 @@ import numpy as np
 
 from ..core.lease_engine import LeaseEngine
 from ..core.store import Replica, TardisStore
-from ..models import decode_step, init_cache, prefill
+from ..models import decode_step, init_cache, prefill, prefill_suffix
+
+# families whose prefill KV cache is position-addressable block-wise, i.e.
+# can be carried through the paged prefix-KV pool (an SSM state cannot).
+KV_POOL_FAMILIES = ("dense", "vlm")
 
 
 @dataclasses.dataclass
@@ -46,6 +61,35 @@ class Request:
     max_new: int = 8
     done: bool = False
     output: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class WavePlan:
+    """Outcome of the per-wave batched lease protocol for one wave.
+
+    ``groups`` holds each request's prefix block ids; ``skip_tokens`` /
+    ``skip_bids`` name the pool-backed common prefix prefill may skip
+    (pool-valid *before* this wave, identical bids across the wave);
+    ``miss_writers`` maps each newly-written block id to the
+    ``(request_index, chunk_index)`` whose prefill output backs it, and
+    ``repair_writers`` the tag-hit blocks whose pool slot is invalid (e.g.
+    freed by a weight publish) and gets repopulated by this wave's prefill.
+    """
+    groups: List[List[int]]
+    skip_tokens: int
+    skip_bids: List[int]
+    miss_writers: Dict[int, Tuple[int, int]]
+    repair_writers: Dict[int, Tuple[int, int]]
+
+
+def _prefix_cache(kp, vp, batch, cache_len: int, skip: int):
+    """Per-layer (L, skip, hk, dh) leased prefix KV -> a wave's
+    (L, B, cache_len, hk, dh) decode cache with the prefix pre-filled."""
+    shape = (kp.shape[0], batch, cache_len) + kp.shape[2:]
+    kc = jnp.zeros(shape, jnp.bfloat16)
+    vc = jnp.zeros(shape, jnp.bfloat16)
+    return {"k": kc.at[:, :, :skip].set(kp[:, None].astype(jnp.bfloat16)),
+            "v": vc.at[:, :, :skip].set(vp[:, None].astype(jnp.bfloat16))}
 
 
 class DecodeReplica:
@@ -70,10 +114,19 @@ class DecodeReplica:
         # says it is the content this request wants (collision evictions
         # re-tag blocks without invalidating anybody).
         self.kv_leases: Dict[int, Tuple[int, int, int]] = {}
+        self.last_prefill_cache = None   # wave's KV, read by pool write-back
         self._decode = jax.jit(
             lambda p, c, t, i: decode_step(cfg, p, c, t, i))
         self._prefill = jax.jit(
             lambda p, b: prefill(cfg, p, b, cache_len))
+        # the prefix cache is assembled INSIDE the jit so XLA fuses the
+        # zeros + prefix scatter instead of shipping full caches as inputs
+        self._prefill_suffix = jax.jit(
+            lambda p, b, kp, vp, n: prefill_suffix(
+                cfg, p, b,
+                _prefix_cache(kp, vp, b["tokens"].shape[0], cache_len, n),
+                n),
+            static_argnums=4)
 
     def params(self):
         """Weight access through the lease (renewal-on-expiry)."""
@@ -89,16 +142,35 @@ class DecodeReplica:
             bid: (max(0, w - shift), r - shift, t)
             for bid, (w, r, t) in self.kv_leases.items() if r >= shift}
 
-    def serve(self, reqs: List[Request]) -> List[Request]:
-        """Greedy-decode a wave of requests (one continuous batch)."""
+    def serve(self, reqs: List[Request], prefix_kv=None,
+              skip: int = 0, params=None) -> List[Request]:
+        """Greedy-decode a wave of requests (one continuous batch).
+
+        When ``prefix_kv`` carries the wave's shared leased prefix --
+        per-layer ``(k, v)`` of shape (L, skip, kv_heads, head_dim),
+        materialized from the engine's paged pool -- prefill runs only on
+        the suffix tokens, skipping the prefix's attention + MLP.
+        ``params`` may be preloaded by the caller (the cluster reads the
+        weight lease first so it can match pool KV to the weight version
+        this prefill will actually use).
+        """
         if not reqs:
             return reqs
-        params = self.params()
+        if params is None:
+            params = self.params()
         s = max(len(r.prompt) for r in reqs)
         toks = np.zeros((len(reqs), s), np.int32)
         for i, r in enumerate(reqs):
             toks[i, :len(r.prompt)] = r.prompt
-        cache, logits = self._prefill(params, {"tokens": jnp.asarray(toks)})
+        if prefix_kv is not None and 0 < skip < s:
+            kp, vp = prefix_kv
+            cache, logits = self._prefill_suffix(
+                params, {"tokens": jnp.asarray(toks[:, skip:])},
+                kp, vp, int(skip))
+        else:
+            cache, logits = self._prefill(params,
+                                          {"tokens": jnp.asarray(toks)})
+        self.last_prefill_cache = cache
         outs = [[] for _ in reqs]
         cur = jnp.int32(s)
         next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
@@ -123,33 +195,61 @@ class ServingCluster:
                  n_replicas: int = 2, lease: int = 10,
                  n_prefix_blocks: int = 4096, prefix_block_tokens: int = 16,
                  kv_lease: int = 64, prefix_reuse: bool = True,
+                 ts_bits: int = 30, prefix_backend: str = "pallas",
                  **replica_kw):
+        self.cfg = cfg
         self.store = TardisStore(lease=lease)
         p0 = init_params_fn()
         nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(p0))
         self.publisher = Replica(self.store, "trainer")
         self.publisher.write("params", p0, nbytes=nbytes)
         self.param_bytes = nbytes
+        # forward-pass cost of one prompt token (2 flops per param-weight);
+        # what a prefix-pool hit saves prefill per skipped token.
+        self._flops_per_token = 2 * int(
+            sum(x.size for x in jax.tree.leaves(p0)))
         self.replicas = [
             DecodeReplica(cfg, self.store, f"replica{i}", **replica_kw)
             for i in range(n_replicas)]
-        # paged prefix-KV metadata: one leased block per prefix chunk.
+        # paged prefix-KV blocks: lease metadata + real KV payloads (for
+        # attention-cache families) in one engine.
         self.prefix_block_tokens = int(prefix_block_tokens)
         self.prefix_reuse = bool(prefix_reuse)
         kv_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim()
                     * 4 * self.prefix_block_tokens)
+        kv_shape = None
+        if self.prefix_reuse and cfg.family in KV_POOL_FAMILIES:
+            kv_shape = (self.prefix_block_tokens, 2,
+                        cfg.n_layers * cfg.n_kv_heads, cfg.head_dim())
         self.prefix_engine = LeaseEngine(
-            n_prefix_blocks, lease=kv_lease, block_bytes=kv_bytes)
+            n_prefix_blocks, lease=kv_lease, block_bytes=kv_bytes,
+            ts_bits=ts_bits, backend=prefix_backend,
+            kv_block_shape=kv_shape)
         self._tags = np.full(n_prefix_blocks, -1, np.int64)  # content hashes
+        # weight version each pool slot's KV was computed under: a wave may
+        # only skip prefill on KV matching the weights it will serve with
+        # (same-version staleness is SC-legal; cross-version mixing is not)
+        self._pool_wver = np.full(n_prefix_blocks, -1, np.int64)
         self.prefix_stats = {
             "prefix_block_hits": 0, "prefix_local_hits": 0,
             "prefix_renewals": 0, "prefix_block_misses": 0,
             "prefix_evictions": 0, "prefix_tokens_reused": 0,
+            "prefix_prefill_tokens_skipped": 0, "prefix_flops_saved": 0,
         }
 
     def publish_weights(self, params) -> int:
-        """Hot-swap: no invalidation broadcast; replicas renew on expiry."""
+        """Hot-swap: no invalidation broadcast; replicas renew on expiry.
+
+        The prefix-KV pool's payloads were computed under the OLD weights,
+        and pool validity (unlike a lease) never expires -- so the publish
+        frees every pool slot locally (a manager-side bitmap clear, zero
+        messages to replicas; tags and lease metadata stay).  Later waves
+        repair the slots from their own prefill (``repair_writers``).
+        """
         self.publisher.write("params", params, nbytes=self.param_bytes)
+        if self.prefix_engine.has_kv:
+            self.prefix_engine.invalidate_kv(
+                np.arange(self.prefix_engine.n_blocks))
         return self.publisher.pts
 
     # -- prefix-KV reuse ----------------------------------------------------
@@ -168,53 +268,105 @@ class ServingCluster:
         return bids, tags
 
     def _lease_prefix(self, rep: DecodeReplica, prompt: np.ndarray) -> None:
-        """Prefill-side prefix reuse for one request on one replica.
+        """Single-request compatibility wrapper: a wave of one."""
+        self._lease_prefix_wave(rep, [prompt])
 
-        Matching blocks are leased: locally when the replica's lease still
-        covers its pts, through the engine otherwise (data-less renewal when
-        its cached version matches).  New prefixes are written with the
-        jump-ahead rule -- no invalidation reaches other replicas.
+    def _lease_prefix_wave(self, rep: DecodeReplica,
+                           prompts: List[np.ndarray]) -> WavePlan:
+        """Per-wave batched prefix leasing for one replica.
+
+        The whole wave charges ONE logical tick (the paper's self-inc
+        bounds staleness per protocol interaction, and the wave is one
+        interaction), classifies every request's blocks against the same
+        table snapshot, then resolves all renewals in a single
+        ``read_many`` kernel dispatch and all misses in at most one
+        jump-ahead write over their union -- N requests sharing a system
+        prompt collapse to 1 read + <=1 write instead of N full-table
+        dispatch pairs.  No invalidation reaches other replicas.
         """
-        rep.kv_pts += 1        # per-request logical tick (paper's self-inc:
-        #                        bounds staleness and lets leases expire)
-        bids, tags = self._prefix_blocks_of(prompt)
+        rep.kv_pts += 1
         ps = self.prefix_stats
-        renew_idx, renew_req, miss_idx = [], [], []
-        for bid, tag in zip(bids, tags):
-            if self._tags[bid] == tag:
-                ps["prefix_block_hits"] += 1
-                ps["prefix_tokens_reused"] += self.prefix_block_tokens
-                ent = rep.kv_leases.get(bid)
-                cached_ok = ent is not None and ent[2] == tag
-                if cached_ok and rep.kv_pts <= ent[1]:
-                    ps["prefix_local_hits"] += 1     # unexpired local lease
-                    rep.kv_pts = max(rep.kv_pts, ent[0])
-                elif bid not in renew_idx:
-                    renew_idx.append(bid)
-                    # a cached copy of DIFFERENT content can't renew
-                    renew_req.append(ent[0] if cached_ok else -1)
-            else:
-                if self._tags[bid] != -1:
-                    ps["prefix_evictions"] += 1      # collision: re-tag
-                ps["prefix_block_misses"] += 1
-                if bid not in miss_idx:
-                    miss_idx.append(bid)
-                self._tags[bid] = tag
-        if renew_idx:                                # before any jump-ahead
-            res = self.prefix_engine.read(renew_idx, rep.kv_pts,
-                                          req_wts=renew_req)
-            rep.kv_pts = res.new_pts
-            # only requests carrying a cached version are renewals; the
-            # rest are first fetches of someone else's prefix blocks
-            ps["prefix_renewals"] += sum(1 for rq in renew_req if rq >= 0)
-            for i, bid in enumerate(renew_idx):
+        bt = self.prefix_block_tokens
+        groups, tags_by_req = [], []
+        for prompt in prompts:
+            bids, tags = self._prefix_blocks_of(prompt)
+            groups.append(bids)
+            tags_by_req.append(tags)
+        # pool-backed leading blocks per request, against the PRE-wave pool
+        # (blocks written later this wave aren't materialized yet).
+        covered = []
+        for bids, tags in zip(groups, tags_by_req):
+            c = 0
+            for bid, tag in zip(bids, tags):
+                if self._tags[bid] != tag or not self.prefix_engine.kv_ok(bid):
+                    break
+                c += 1
+            covered.append(c)
+        skip_blocks = min(covered) if covered else 0
+        while skip_blocks and any(g[:skip_blocks] != groups[0][:skip_blocks]
+                                  for g in groups):
+            skip_blocks -= 1         # hash collision: bids diverge, back off
+        skip_bids = list(groups[0][:skip_blocks]) if skip_blocks else []
+
+        local_wts: List[int] = []
+        renew_groups: List[List[int]] = [[] for _ in prompts]
+        renew_req: Dict[int, int] = {}
+        miss_writers: Dict[int, Tuple[int, int]] = {}
+        repair_writers: Dict[int, Tuple[int, int]] = {}
+        for ri, (bids, tags) in enumerate(zip(groups, tags_by_req)):
+            for c, (bid, tag) in enumerate(zip(bids, tags)):
+                if self._tags[bid] == tag:
+                    ps["prefix_block_hits"] += 1
+                    ps["prefix_tokens_reused"] += bt
+                    if (self.prefix_engine.has_kv
+                            and not self.prefix_engine.kv_ok(bid)
+                            and bid not in repair_writers):
+                        # tag hit but the payload slot was freed (weight
+                        # publish / eviction): repopulate from this wave
+                        repair_writers[bid] = (ri, c)
+                    ent = rep.kv_leases.get(bid)
+                    cached_ok = ent is not None and ent[2] == tag
+                    if cached_ok and rep.kv_pts <= ent[1]:
+                        ps["prefix_local_hits"] += 1   # unexpired lease
+                        local_wts.append(ent[0])
+                    else:
+                        renew_groups[ri].append(bid)
+                        if bid not in renew_req:
+                            # a copy of DIFFERENT content can't renew
+                            renew_req[bid] = ent[0] if cached_ok else -1
+                else:
+                    if self._tags[bid] != -1:
+                        ps["prefix_evictions"] += 1    # collision: re-tag
+                        if self.prefix_engine.has_kv:
+                            # the slot's payload no longer matches its tag
+                            self.prefix_engine.invalidate_kv([bid])
+                    ps["prefix_block_misses"] += 1
+                    self._tags[bid] = tag
+                    miss_writers[bid] = (ri, c)        # last writer wins
+        if local_wts:                                  # Table II local hits
+            rep.kv_pts = max(rep.kv_pts, max(local_wts))
+        active = [g for g in renew_groups if g]
+        if active:                                     # ONE kernel dispatch
+            res = self.prefix_engine.read_many(active, rep.kv_pts,
+                                               req_wts=renew_req)
+            rep.kv_pts = int(res.new_pts.max())
+            ps["prefix_renewals"] += sum(
+                1 for b in res.union_idx if renew_req[int(b)] >= 0)
+            for i, bid in enumerate(res.union_idx):
+                bid = int(bid)
                 rep.kv_leases[bid] = (int(res.wts[i]), int(res.rts[i]),
                                       int(self._tags[bid]))
-        if miss_idx:
-            ts = self.prefix_engine.write(miss_idx, rep.kv_pts)
+        if miss_writers:                               # one wave jump-ahead
+            ts = self.prefix_engine.write_many([list(miss_writers)],
+                                               rep.kv_pts)
             rep.kv_pts = ts
-            for bid in miss_idx:
+            for bid in miss_writers:
                 rep.kv_leases[bid] = (ts, ts, int(self._tags[bid]))
+        # a repair superseded by a same-wave eviction defers to the miss
+        repair_writers = {b: rc for b, rc in repair_writers.items()
+                          if b not in miss_writers}
+        return WavePlan(groups, skip_blocks * bt, skip_bids, miss_writers,
+                        repair_writers)
 
     def _maybe_rebase(self) -> None:
         shift = self.prefix_engine.maybe_rebase()
@@ -222,7 +374,88 @@ class ServingCluster:
             for rep in self.replicas:
                 rep.rebase_kv(shift)
 
+    # -- paged-KV pool <-> per-layer cache layout ---------------------------
+
+    def _pool_to_layer_kv(self, pooled) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(nb, chunk, 2, L*hk, dh) pool blocks -> per-layer (L, P, hk, dh)
+        k and v, P = nb * chunk contiguous prefix tokens."""
+        nb, bt = pooled.shape[0], self.prefix_block_tokens
+        layers, hk = self.cfg.n_layers, self.cfg.n_kv_heads
+        dh = self.cfg.head_dim()
+        kv = jnp.asarray(pooled).reshape(nb, bt, 2, layers, hk, dh)
+        kv = kv.transpose(2, 3, 0, 1, 4, 5).reshape(2, layers, nb * bt,
+                                                    hk, dh)
+        return kv[0], kv[1]
+
+    def _cache_block_kv(self, cache, ri: int, chunk: int) -> jnp.ndarray:
+        """One request's prefix chunk out of a wave's prefill cache, in the
+        pool's (chunk, 2, L*hk, dh) block layout."""
+        bt = self.prefix_block_tokens
+        lo = chunk * bt
+        kv = jnp.stack([cache["k"][:, ri, lo:lo + bt],
+                        cache["v"][:, ri, lo:lo + bt]])   # (2, L, bt, hk, dh)
+        layers, hk = self.cfg.n_layers, self.cfg.n_kv_heads
+        return kv.transpose(2, 0, 1, 3, 4).reshape(
+            bt, 2, layers * hk, self.cfg.head_dim())
+
+    def _writeback_prefix(self, rep: DecodeReplica, plan: WavePlan,
+                          wver: Optional[int]) -> None:
+        """Publish the wave's freshly-prefilled prefix blocks into the pool
+        (the payload half of the jump-ahead writes already issued), plus
+        repairs of freed slots whose tag still matches.  ``wver`` is the
+        weight version the wave's prefill ran under; it tags the slots."""
+        cache = rep.last_prefill_cache
+        if cache is None or "k" not in cache:
+            return
+        writers = {**plan.repair_writers, **plan.miss_writers}
+        bids = list(writers)
+        blocks = jnp.stack([self._cache_block_kv(cache, ri, c)
+                            for ri, c in writers.values()])
+        self.prefix_engine.write_kv(bids, blocks)
+        self._pool_wver[bids] = -1 if wver is None else int(wver)
+
     # -- request loop -------------------------------------------------------
+
+    def _serve_wave(self, rep: DecodeReplica, wave: List[Request],
+                    plan: Optional[WavePlan]) -> None:
+        # read the weight lease first: the pool may only serve KV computed
+        # under the SAME weight version this wave's prefill will use
+        params = rep.params()
+        wver = rep.reader.cached_version("params")
+        skip, prefix_kv = 0, None
+        if (plan is not None and plan.skip_tokens
+                and self.prefix_engine.has_kv):
+            n_ok = 0
+            for bid in plan.skip_bids:
+                # re-check validity too: a same-wave collision eviction may
+                # have freed a slot after the plan's covered walk ran
+                if (self._pool_wver[bid] != wver
+                        or not self.prefix_engine.kv_ok(bid)):
+                    break
+                n_ok += 1
+            stale = plan.skip_bids[n_ok:]
+            if stale:
+                # cross-version KV must never mix into one forward pass:
+                # free the slots; this wave recomputes those positions
+                # (they're beyond its skip), so repair them right away
+                self.prefix_engine.invalidate_kv(stale)
+                for j, bid in enumerate(stale):
+                    plan.repair_writers.setdefault(bid, (0, n_ok + j))
+            skip = n_ok * self.prefix_block_tokens
+            if 0 < skip < min(len(r.prompt) for r in wave):
+                pooled = self.prefix_engine.read_kv(plan.skip_bids[:n_ok])
+                prefix_kv = self._pool_to_layer_kv(pooled)
+                self.prefix_stats["prefix_prefill_tokens_skipped"] += (
+                    skip * len(wave))
+                self.prefix_stats["prefix_flops_saved"] += (
+                    skip * len(wave) * self._flops_per_token)
+            else:
+                skip = 0
+        rep.serve(wave, prefix_kv=prefix_kv, skip=skip, params=params)
+        if (plan is not None and self.prefix_engine.has_kv
+                and (plan.miss_writers or plan.repair_writers)):
+            self._writeback_prefix(rep, plan, wver)
+        rep.last_prefill_cache = None    # only needed until the write-back
 
     def run(self, requests: List[Request]) -> Tuple[List[Request], Dict]:
         waves: List[List[Request]] = []
@@ -232,11 +465,11 @@ class ServingCluster:
             waves[-1].append(r)
         for i, wave in enumerate(waves):
             rep = self.replicas[i % len(self.replicas)]
+            plan = None
             if self.prefix_reuse:
-                for r in wave:
-                    self._lease_prefix(rep, r.prompt)
+                plan = self._lease_prefix_wave(rep, [r.prompt for r in wave])
                 self._maybe_rebase()
-            rep.serve(wave)
+            self._serve_wave(rep, wave, plan)
         return requests, self.coherence_report()
 
     def coherence_report(self) -> Dict[str, Any]:
@@ -267,4 +500,10 @@ class ServingCluster:
             "prefix_payload_transfers": e.payload_transfers,
             "prefix_blocks_written": e.writes,
             "prefix_rebases": e.rebases,
+            # per-wave batched dispatch + paged-KV-pool ledger
+            "prefix_read_dispatches": e.read_ops,
+            "prefix_write_dispatches": e.write_ops,
+            "prefix_kv_blocks_written": e.kv_blocks_written,
+            "prefix_kv_blocks_read": e.kv_blocks_read,
+            "prefix_kv_evictions": e.kv_evictions,
         }

@@ -150,13 +150,25 @@ def test_rebase_parity_between_backends():
 
 
 def test_block_table_is_engine_adapter():
-    bt = BlockTable(16, lease=8, backend="numpy")
+    bt = BlockTable(16, lease=8, backend="numpy", kv_block_shape=(2, 3))
     assert bt.wts.dtype == np.int32
     expired, pts = bt.read_blocks(np.array([0, 3]), 0)
     assert (bt.rts[[0, 3]] >= 8).all()
     ts = bt.write_blocks(np.array([3]), pts)
     assert ts == int(bt.wts[3]) == int(bt.rts[3])
     assert bt.engine.stats.reads == 2 and bt.engine.stats.writes == 1
+    # per-wave batched forms: overlapping groups, one engine op each
+    expired2, pts2 = bt.read_blocks_many([[0, 3], [3, 7]], ts)
+    assert expired2.shape == (2, 3) and pts2 >= ts     # union = {0, 3, 7}
+    assert bt.engine.stats.read_ops == 2
+    ts2 = bt.write_blocks_many([[1, 5], [5, 9]], pts2)
+    assert ts2 >= pts2 and bt.engine.stats.write_ops == 2
+    assert (bt.wts[[1, 5, 9]] == ts2).all()
+    # the paged-KV payload pool rides the same adapter
+    blk = np.arange(6, dtype=np.float32).reshape(1, 2, 3)
+    bt.engine.write_kv([5], blk)
+    np.testing.assert_array_equal(np.asarray(bt.engine.read_kv([5]))[0],
+                                  blk[0])
 
 
 def test_store_charges_message_flits():
@@ -179,6 +191,212 @@ def test_store_charges_message_flits():
     assert store.stats.flits < flits_after_pub + payload_cost \
         + 20 * renew_cost + 1                    # renewals never carried data
     assert store.stats.wire_bytes == store.stats.flits * P.FLIT_BYTES
+
+
+def _tiny_cluster(**kw):
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.models import init_params
+    from repro.runtime import ServingCluster
+
+    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=2, d_model=64,
+                  vocab=128)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return ServingCluster(cfg, lambda: params, **kw)
+
+
+def test_wave_of_identical_prompts_advances_pts_once():
+    """Regression: the wave is ONE protocol interaction -- a wave of N
+    identical prompts charges a single logical tick, and pure local hits
+    dispatch nothing to the engine (the old code ticked per request)."""
+    cluster = _tiny_cluster(n_replicas=2, prefix_block_tokens=4, kv_lease=64)
+    rep = cluster.replicas[0]
+    p = np.arange(1, 13, dtype=np.int32)            # 3 prefix blocks
+    cluster._lease_prefix_wave(rep, [p])            # writes the blocks
+    cluster._lease_prefix_wave(rep, [p] * 8)        # one renewal dispatch
+    before = rep.kv_pts
+    reads_before = cluster.prefix_engine.stats.read_ops
+    writes_before = cluster.prefix_engine.stats.write_ops
+    hits_before = cluster.prefix_stats["prefix_local_hits"]
+    cluster._lease_prefix_wave(rep, [p] * 8)        # pure local hits
+    assert rep.kv_pts == before + 1                 # one tick per WAVE
+    assert cluster.prefix_engine.stats.read_ops == reads_before
+    assert cluster.prefix_engine.stats.write_ops == writes_before
+    assert cluster.prefix_stats["prefix_local_hits"] == hits_before + 24
+
+
+def test_wave_sharing_prefix_is_one_dispatch_and_skips_prefill():
+    """Acceptance: a wave of B requests sharing a system prompt resolves
+    with exactly 1 read_many dispatch and <=1 write dispatch, and a later
+    wave serves the prefix from the paged KV pool -- prefill skips it
+    (prefix_flops_saved > 0)."""
+    from repro.runtime import Request
+
+    cluster = _tiny_cluster(n_replicas=2, prefix_block_tokens=8,
+                            kv_lease=16, cache_len=64, selfinc_period=4)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, 128, 32).astype(np.int32)
+    reqs = [Request(i, np.concatenate(
+                [prefix, rng.integers(1, 128, 4).astype(np.int32)]),
+                max_new=1) for i in range(4)]
+    done, rep = cluster.run(reqs)                   # 2 waves of B=2
+    assert all(r.done for r in done)
+    e = cluster.prefix_engine.stats
+    # wave 1 (replica0): req0 misses the 4 prefix blocks (1 write), req1
+    # fetches them (1 read); wave 2 (replica1): both renew (1 read).
+    assert e.read_ops == 2
+    assert e.write_ops == 1
+    assert e.writes == 4                            # 4 blocks, one union op
+    # wave 2 ran suffix-only prefill on pool-materialized prefix KV
+    assert rep["prefix_prefill_tokens_skipped"] == 32 * 2
+    assert rep["prefix_flops_saved"] > 0
+    assert rep["prefix_kv_blocks_written"] == 4
+    assert rep["prefix_kv_blocks_read"] == 4
+
+
+def test_weight_publish_frees_pool_and_waves_repair_it():
+    """A weight hot-swap must not let prefill skip on KV computed under the
+    old weights: the publish frees every pool slot (zero messages), and the
+    next wave repairs them from its own prefill so later waves skip again."""
+    import jax
+    from repro.runtime import Request
+
+    cluster = _tiny_cluster(n_replicas=2, prefix_block_tokens=8,
+                            kv_lease=16, cache_len=64, selfinc_period=4)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, 128, 32).astype(np.int32)
+
+    def mk(i):
+        return Request(i, np.concatenate(
+            [prefix, rng.integers(1, 128, 4).astype(np.int32)]), max_new=1)
+
+    cluster.run([mk(i) for i in range(4)])
+    assert cluster.prefix_engine.kv_valid_count() >= 4   # prefix in pool
+    skipped = cluster.prefix_stats["prefix_prefill_tokens_skipped"]
+    assert skipped > 0
+    old = cluster.store._val["params"]
+    cluster.publish_weights(jax.tree.map(lambda p: p * 0.5, old))
+    assert cluster.prefix_engine.kv_valid_count() == 0   # pool freed
+    cluster.run([mk(i) for i in range(4, 8)])
+    rep = cluster.coherence_report()
+    # wave 3 repaired the slots (no skip on stale KV), wave 4 skipped again
+    assert cluster.prefix_engine.kv_valid_count() >= 4
+    assert rep["prefix_prefill_tokens_skipped"] == skipped + 32 * 2
+
+
+def test_cross_version_pool_kv_never_mixes_into_prefill():
+    """Pool KV may only skip prefill for a wave serving the SAME weight
+    version it was computed under: same-version staleness is SC-legal (a
+    lagging replica reuses its lagging KV), but a renewed replica must
+    refuse, free, and repair the slots at its own version."""
+    import jax
+    from repro.runtime import Request
+
+    cluster = _tiny_cluster(n_replicas=1, prefix_block_tokens=8,
+                            kv_lease=64, cache_len=64, lease=1000,
+                            selfinc_period=1000)
+    rep = cluster.replicas[0]
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, 128, 32).astype(np.int32)
+
+    def serve_one(i):
+        cluster.run([Request(i, np.concatenate(
+            [prefix, rng.integers(1, 128, 4).astype(np.int32)]), max_new=1)])
+        return cluster.prefix_stats["prefix_prefill_tokens_skipped"]
+
+    serve_one(0)                       # writes pool under weight version v0
+    v0 = rep.reader.cached_version("params")
+    assert serve_one(1) == 32          # skips at v0
+    cluster.publish_weights(jax.tree.map(
+        lambda p: p * 0.5, cluster.store._val["params"]))
+    # replica's weight lease is unexpired: it still serves v0, repairs the
+    # freed slots with v0 KV...
+    assert serve_one(2) == 32
+    assert rep.reader.cached_version("params") == v0
+    # ...and same-version staleness remains legal: it skips on v0 KV
+    assert serve_one(3) == 64
+    assert (cluster._pool_wver[cluster._pool_wver >= 0] == v0).all()
+    # force the weight renewal: now the replica serves v1
+    rep.reader.pts = 10 ** 6
+    assert serve_one(4) == 64          # refuses v0 KV, repairs at v1
+    assert rep.reader.cached_version("params") != v0
+    assert serve_one(5) == 96          # skips again, on v1 KV
+
+
+@pytest.mark.parametrize("backend", ["pallas", "numpy"])
+def test_rebase_mid_flight_preserves_kv_pool(backend):
+    """A ts_bits rebase racing a stream of waves shifts metadata only: the
+    paged KV pool's payloads and validity survive bit-for-bit (timestamps
+    never touch the pool)."""
+    eng = LeaseEngine(8, lease=4, backend=backend, ts_bits=7,
+                      kv_block_shape=(4, 2, 2, 4), kv_dtype=np.float32)
+    rng = np.random.default_rng(0)
+    blocks = rng.standard_normal((3, 4, 2, 2, 4)).astype(np.float32)
+    eng.write_kv([1, 4, 6], blocks)
+    before = np.asarray(eng.read_kv([1, 4, 6])).copy()
+    pts = 0
+    while eng.stats.rebases == 0:                   # wave stream vs rebase
+        pts = eng.write_many([[0, 1], [4, 5]], pts)
+        pts = int(eng.read_many([[0, 1, 4, 6]], pts).new_pts.max())
+        pts = LeaseEngine.rebase_pts(pts, eng.maybe_rebase())
+    assert int(eng.rts.max()) < (1 << 7)
+    np.testing.assert_array_equal(np.asarray(eng.read_kv([1, 4, 6])), before)
+    assert eng.kv_ok(1) and eng.kv_ok(4) and eng.kv_ok(6)
+    assert eng.kv_valid_count() == 3
+
+
+def test_serving_survives_rebase_with_pool_hits():
+    """Cluster-level: rebases fire mid-stream and prefill keeps skipping
+    the pooled prefix afterwards."""
+    from repro.runtime import Request
+
+    cluster = _tiny_cluster(n_replicas=2, prefix_block_tokens=8,
+                            kv_lease=24, ts_bits=5, cache_len=64,
+                            selfinc_period=4)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, 128, 32).astype(np.int32)
+    reqs = [Request(i, np.concatenate(
+                [prefix, rng.integers(1, 128, 8).astype(np.int32)]),
+                max_new=1) for i in range(24)]
+    done, rep = cluster.run(reqs)
+    assert all(r.done for r in done)
+    assert rep["prefix_rebases"] >= 1
+    assert rep["prefix_flops_saved"] > 0
+    # waves after the first keep hitting the pool across rebases
+    assert rep["prefix_prefill_tokens_skipped"] >= 32 * 2 * 5
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=2, deadline=None)
+def test_eviction_frees_pool_slot_no_leak(seed):
+    """Property: over 10k random requests on a tiny colliding table, a
+    valid pool slot always holds content written for its CURRENT tag, and
+    validity never outgrows the live tags -- collision evictions free their
+    slot, so the pool cannot leak."""
+    cluster = _tiny_cluster(n_replicas=1, n_prefix_blocks=8,
+                            prefix_block_tokens=4, prefix_backend="numpy")
+    rep = cluster.replicas[0]
+    eng = cluster.prefix_engine
+    rng = np.random.default_rng(seed)
+    written_tag = {}                 # bid -> tag its pool content was for
+    served = 0
+    while served < 10_000:
+        wave = [rng.integers(1, 64, 4 * int(rng.integers(1, 4)))
+                .astype(np.int32) for _ in range(int(rng.integers(1, 5)))]
+        plan = cluster._lease_prefix_wave(rep, wave)
+        served += len(wave)
+        if plan.miss_writers:        # stand-in for the prefill write-back
+            bids = list(plan.miss_writers)
+            eng.write_kv(bids, np.zeros((len(bids),) + eng.kv_block_shape,
+                                        np.float32))
+            for b in bids:
+                written_tag[b] = int(cluster._tags[b])
+        live = int((cluster._tags != -1).sum())
+        assert eng.kv_valid_count() <= live <= eng.n_blocks
+        for b in np.nonzero(eng._kv_valid)[0]:
+            assert written_tag[int(b)] == int(cluster._tags[b])
+    assert cluster.prefix_stats["prefix_evictions"] > 0
+    assert eng.stats.kv_evictions > 0
 
 
 def test_prefix_collision_eviction_never_serves_stale_content():
