@@ -1,21 +1,25 @@
-"""LeaseEngine microbench: kernel vs numpy mirror, per-wave vs per-request.
+"""LeaseEngine microbench: kernel vs mirror, per-wave batching, paged decode.
 
 Times the hot LeaseEngine transitions -- the masked lease-check pass
 (read/renew) and the write jump-ahead -- through both backends over block
 tables of serving-realistic sizes, touching a random half of the table per
 op, plus the per-wave batched path: a wave of B requesters sharing a
 system prompt resolved in ONE ``read_many`` dispatch vs B per-request
-``read`` dispatches (the serving cluster's old hot path).  Prints the
+``read`` dispatches, plus the **paged-vs-dense decode** microbench: one
+continuous-batch decode step through LeaseEngine pool pages
+(``models.decode_step_paged``: pool gather + token-row append kernel) vs
+the dense per-request cache step (``models.decode_step``).  Prints the
 repo-standard ``name,us_per_call,derived`` CSV rows (benchmarks/common.py
 convention) and writes the same numbers machine-readable to
 ``BENCH_lease.json`` so the perf trajectory is trackable across PRs.
 
-On TPU the pallas backend runs the compiled kernel; on CPU it runs in
+On TPU the pallas backend runs the compiled kernels; on CPU it runs in
 interpret mode, so the numpy mirror wins there -- the point of the bench is
 to *record* the ratio per platform (EXPERIMENTS.md), not to assert it.
 
 Run:  PYTHONPATH=src python benchmarks/lease_bench.py [--sizes 4096,65536]
                                                       [--json BENCH_lease.json]
+      PYTHONPATH=src python benchmarks/lease_bench.py --smoke   # CI lane
 """
 import argparse
 import json
@@ -101,6 +105,93 @@ def bench_wave(n_blocks: int, backend: str, iters: int, wave: int,
             "dispatches_batched": 1, "dispatches_per_request": wave}
 
 
+def bench_decode(iters: int, steps: int, batch: int = 4,
+                 prompt: int = 64, cache_len: int = 256,
+                 page_tokens: int = 16):
+    """Paged decode (pool pages + append kernel) vs dense-cache decode:
+    ``steps`` continuous-batch decode steps each, same reduced model."""
+    import warnings
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, reduced
+    from repro.core import LeaseEngine
+    from repro.models import (decode_step, decode_step_paged, init_cache,
+                              init_params, prefill)
+
+    from benchmarks.common import row
+
+    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=2, d_model=64,
+                  vocab=256)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab, (batch, prompt)).astype(np.int32)
+    interp = jax.default_backend() != "tpu"
+
+    # dense: per-request caches, lockstep positions
+    dense_fn = jax.jit(lambda p, c, t, i: decode_step(cfg, p, c, t, i))
+    cache, logits = jax.jit(lambda p, b: prefill(cfg, p, b, cache_len))(
+        params, {"tokens": jnp.asarray(toks)})
+    nt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+
+    def run_dense():
+        c, t, cur = cache, nt, jnp.int32(prompt)
+        for _ in range(steps):
+            c, lg = dense_fn(params, c, t, cur)
+            t = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+            cur = cur + 1
+        jax.block_until_ready(lg)
+
+    run_dense()                                        # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        run_dense()
+    dt_dense = (time.perf_counter() - t0) / (iters * steps)
+
+    # paged: same shapes through LeaseEngine pool pages
+    hk, dh = cfg.n_kv_heads, cfg.head_dim()
+    eng = LeaseEngine(batch * (cache_len // page_tokens) + 8,
+                      kv_block_shape=(page_tokens, 2,
+                                      cfg.n_layers * hk, dh))
+    pages_per = cache_len // page_tokens
+    page_rows = np.stack([np.asarray(eng.alloc_pages(pages_per), np.int32)
+                          for _ in range(batch)])
+    lengths = np.full(batch, prompt, np.int32)
+    paged_fn = jax.jit(
+        lambda p, pool, pr, ln, tk: decode_step_paged(
+            cfg, p, pool, pr, ln, tk, chunk=page_tokens, interpret=interp),
+        donate_argnums=(1,))
+
+    def run_paged():
+        pool, t, ln = eng.kv_rows_view(), nt, jnp.asarray(lengths)
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=".*donat.*")
+            for _ in range(steps):
+                pool, lg = paged_fn(params, pool, jnp.asarray(page_rows),
+                                    ln, t)
+                t = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)[:, None]
+                ln = ln + 1
+        eng.set_kv_rows(pool, tokens_appended=batch * steps)
+        jax.block_until_ready(lg)
+
+    run_paged()                                        # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        run_paged()
+    dt_paged = (time.perf_counter() - t0) / (iters * steps)
+
+    row(f"decode_dense/B{batch}/T{cache_len}", dt_dense * 1e6,
+        f"{batch / dt_dense:.3e} tok/s")
+    row(f"decode_paged/B{batch}/T{cache_len}", dt_paged * 1e6,
+        f"{batch / dt_paged:.3e} tok/s, "
+        f"{dt_paged / dt_dense:.2f}x vs dense")
+    return {"batch": batch, "cache_len": cache_len, "steps": steps,
+            "dense_us_per_step": dt_dense * 1e6,
+            "paged_us_per_step": dt_paged * 1e6,
+            "paged_over_dense": dt_paged / dt_dense}
+
+
 def main():
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     import jax
@@ -112,16 +203,24 @@ def main():
     ap.add_argument("--iters", type=int, default=20)
     ap.add_argument("--wave", type=int, default=8,
                     help="requesters per wave for the batched-read bench")
+    ap.add_argument("--decode-steps", type=int, default=8,
+                    help="decode steps per timed run (paged-vs-dense)")
     ap.add_argument("--json", default="BENCH_lease.json",
                     help="machine-readable output path ('' to skip)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes/iters so CI exercises every bench "
+                         "path in seconds (writes no JSON)")
     args = ap.parse_args()
+    if args.smoke:
+        args.sizes, args.iters, args.decode_steps = "1024", 2, 2
+        args.json = ""
 
     plat = jax.default_backend()
     header(f"LeaseEngine throughput (platform={plat}; pallas backend runs "
            f"{'compiled' if plat == 'tpu' else 'in interpret mode'})")
     sizes = [int(s) for s in args.sizes.split(",")]
     out = {"platform": plat, "iters": args.iters,
-           "engine": {}, "wave": {}}
+           "engine": {}, "wave": {}, "decode": {}}
     for n in sizes:
         for backend in ("pallas", "numpy"):
             out["engine"][f"{backend}/n{n}"] = bench_engine(
@@ -132,6 +231,9 @@ def main():
         for backend in ("pallas", "numpy"):
             out["wave"][f"{backend}/n{n}"] = bench_wave(
                 n, backend, args.iters, args.wave, blocks_per_req=8)
+    header("paged-vs-dense decode (continuous-batch step, reduced model)")
+    out["decode"]["B4/T256"] = bench_decode(max(2, args.iters // 4),
+                                            args.decode_steps)
     for n in sizes:
         k = out["engine"][f"pallas/n{n}"]
         m = out["engine"][f"numpy/n{n}"]
@@ -142,6 +244,10 @@ def main():
               f"wave speedup pallas "
               f"{out['wave'][f'pallas/n{n}']['speedup']:.2f}x / numpy "
               f"{out['wave'][f'numpy/n{n}']['speedup']:.2f}x")
+    d = out["decode"]["B4/T256"]
+    print(f"# paged decode {d['paged_us_per_step']:.0f} us/step vs dense "
+          f"{d['dense_us_per_step']:.0f} us/step "
+          f"({d['paged_over_dense']:.2f}x)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)

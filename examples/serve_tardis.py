@@ -1,15 +1,18 @@
-"""End-to-end serving driver: batched requests against a replica cluster
-whose weights and prefix-KV metadata are Tardis-coherent.
+"""End-to-end serving driver: continuous batching through paged pool KV.
 
-Serves a tinyllama-family model on N replicas with continuous waves of
-batched requests sharing a common system-prompt prefix, hot-swaps the
-weights mid-stream (no invalidation broadcast), and prints the coherence
-ledger: renewals, data-less renewal savings, prefix-KV block reuse through
-the LeaseEngine (Pallas ``tardis_lease`` kernel), and what a full-map
-directory would have done on the same stream.
+Serves a tinyllama-family model on N replicas with a stream of requests
+sharing a common system-prompt prefix; every KV byte decode touches lives
+in LeaseEngine pool pages (decode budgets are randomized per request, so
+streams finish independently and the scheduler admits new requests into
+running batches as pages free up).  Hot-swaps the weights mid-stream (no
+invalidation broadcast) and prints the coherence ledger: renewals,
+data-less renewal savings, prefix-KV block reuse through the LeaseEngine
+(Pallas ``tardis_lease`` kernels), pool occupancy / page churn, and what a
+full-map directory would have done on the same stream.
 
 Run:  PYTHONPATH=src python examples/serve_tardis.py [--replicas 3]
-      (--check makes it a CI smoke: asserts the prefix-reuse path fired)
+      (--check makes it a CI smoke: asserts the prefix-reuse path fired
+       and a request was admitted mid-batch)
 """
 import argparse
 import time
@@ -51,14 +54,18 @@ def main():
                              prefix_block_tokens=args.prefix_block,
                              kv_lease=16,
                              prefix_reuse=not args.no_prefix_reuse,
-                             cache_len=96, selfinc_period=4)
+                             cache_len=96, selfinc_period=4,
+                             max_batch=3)
     rng = np.random.default_rng(0)
     system_prompt = rng.integers(1, cfg.vocab,
                                  args.prefix_len).astype(np.int32)
+    # randomized decode budgets: streams finish independently, so the
+    # continuous-batching scheduler admits later requests mid-batch
     reqs = [Request(i, np.concatenate(
                 [system_prompt,
                  rng.integers(1, cfg.vocab, rng.integers(4, 24))
-                 .astype(np.int32)]), max_new=args.max_new)
+                 .astype(np.int32)]),
+                max_new=int(rng.integers(1, args.max_new + 1)))
             for i in range(args.requests)]
 
     t0 = time.time()
@@ -92,6 +99,12 @@ def main():
           f"{report['prefix_read_dispatches']} read + "
           f"{report['prefix_write_dispatches']} write wave-batched engine "
           "dispatches;")
+    print(f"=> paged decode: {report['kv_tokens_appended']} token rows "
+          f"appended into pages, {report['decode_block_reads']} decode-time "
+          f"block reads ({report['decode_local_hits']} local hits / "
+          f"{report['decode_renewals']} renewals), "
+          f"{report['paged_mid_batch_admissions']} mid-batch admissions, "
+          f"peak {report['pool_page_peak']} pages in use;")
     print(f"=> a full-map directory would have tracked "
           f"{report['directory_peak_sharers']} sharers and sent "
           f"{report['directory_would_invalidate']} invalidations.")
@@ -107,11 +120,19 @@ def main():
         assert report["prefix_flops_saved"] > 0, \
             "paged-KV pool never skipped prefill on a hit"
         assert report["prefix_kv_blocks_read"] > 0
-        # wave batching: never more engine read dispatches than waves
+        # wave batching: never more engine read dispatches than admission
+        # groups + in-flight renewal rounds
         n_waves = -(-args.requests // args.replicas)
         assert report["prefix_read_dispatches"] <= n_waves
+        # continuous batching: decode runs through pool pages, a request
+        # joined a running batch, and everything was released
+        assert report["kv_tokens_appended"] > 0
+        assert report["paged_mid_batch_admissions"] > 0, \
+            "scheduler never admitted a request mid-batch"
+        assert report["pool_pages_free"] == cluster.n_decode_pages, \
+            "page leak: not every page returned to the free list"
         print("check: serving smoke OK (prefix reuse + data-less renewals "
-              "+ paged-KV prefill skip)")
+              "+ paged-KV prefill skip + mid-batch admission)")
 
 
 if __name__ == "__main__":

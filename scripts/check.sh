@@ -34,9 +34,14 @@ assert any(r.get("cost_analysis", {}).get("flops", 0) > 0 for r in ok), \
 print(f"dryrun smoke: {len(ok)} ok cell(s), nonzero flops")
 EOF
 
-# serving smoke: tinyllama replicas with prefix-KV reuse through the
-# LeaseEngine path (--check asserts prefix hits + data-less renewals).
-python examples/serve_tardis.py --replicas 2 --requests 8 --max-new 2 \
+# serving smoke: tinyllama replicas with continuous-batching paged decode
+# through the LeaseEngine pool (--check asserts prefix hits, data-less
+# renewals, and a mid-batch admission).
+python examples/serve_tardis.py --replicas 2 --requests 16 --max-new 4 \
     --layers 2 --d-model 64 --check
+
+# bench smoke: every lease_bench path (engine, wave, paged-vs-dense
+# decode) runs end to end so the bench code cannot rot.
+python benchmarks/lease_bench.py --smoke
 
 echo "check.sh: all green"

@@ -29,16 +29,18 @@ a read is SH_REQ per block, answered by RENEW_REP (data-less, the common
 case once a reader holds the right version) or SH_REP headers plus payload
 flits for ``block_bytes``; a write publishes header + payload flits.
 
-Two extensions make leased blocks carry *real data* and make the wave the
-unit of dispatch:
+Three extensions make leased blocks carry *real data*, make the wave the
+unit of dispatch, and make the pool the only KV substrate decode touches:
 
   * **paged KV pool** -- when constructed with ``kv_block_shape`` (the
     serving layout is ``(chunk, 2, kv_heads, head_dim)``) the engine owns a
     device-resident ``(n_blocks, row)`` payload pool alongside the
-    ``(wts, rts)`` metadata.  ``write_kv`` scatters block payloads in,
-    ``read_kv`` materializes them through the ``tardis_lease`` Pallas
-    gather kernel (scalar-prefetched ids drive the DMA index map), and a
-    host-side validity bitmap tracks which slots hold content for the
+    ``(wts, rts)`` metadata; each row is ``chunk`` lane-padded TOKEN rows,
+    so a single token is one aligned row of the ``(n_blocks*chunk,
+    token_row)`` flat view (``kv_rows_view``).  ``write_kv`` scatters block
+    payloads in, ``read_kv`` materializes them through the ``tardis_lease``
+    Pallas gather kernel (scalar-prefetched ids drive the DMA index map),
+    and a host-side validity bitmap tracks which slots hold content for the
     *current* tag -- ``invalidate_kv`` frees a slot on collision eviction
     with zero messages.  ``maybe_rebase`` shifts metadata only: pool
     contents are timestamps-free and survive any rebase untouched.
@@ -49,6 +51,14 @@ unit of dispatch:
     requester at the same program timestamp (the serving case: one logical
     tick per wave) the batched results are bit-identical in ``wts/rts/pts``
     to issuing the per-request ops back to back (``tests/test_litmus.py``).
+  * **page allocator + token append** -- block ids in ``[alloc_reserve,
+    n_blocks)`` are free-listed decode pages (``alloc_pages`` /
+    ``free_pages``; admission control gates on ``free_page_count``), and
+    ``append_kv`` scatters single-token rows into their page slots through
+    the ``tardis_lease`` scatter kernel (ids drive the *output* index map
+    with in/out aliasing) -- the serving engine's continuous-batching
+    decode runs entirely against ``kv_rows_view`` and writes back with
+    ``set_kv_rows``.
 """
 from __future__ import annotations
 
@@ -100,6 +110,9 @@ class LeaseStats:
     kv_blocks_written: int = 0   # payload blocks scattered into the pool
     kv_blocks_read: int = 0      # payload blocks gathered out of the pool
     kv_evictions: int = 0        # pool slots freed by invalidate_kv
+    kv_tokens_appended: int = 0  # single token rows appended into pages
+    pages_allocated: int = 0     # free-list pops (decode page churn)
+    pages_freed: int = 0         # free-list pushes
 
     @property
     def wire_bytes(self) -> int:
@@ -147,7 +160,7 @@ class LeaseEngine:
                  backend: str = "pallas", ts_bits: int = 30,
                  block_bytes: int = 0, interpret: Optional[bool] = None,
                  kv_block_shape: Optional[Sequence[int]] = None,
-                 kv_dtype=jnp.bfloat16):
+                 kv_dtype=jnp.bfloat16, alloc_reserve: int = 0):
         if backend not in ("pallas", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
         self.n_blocks = int(n_blocks)
@@ -166,16 +179,27 @@ class LeaseEngine:
             self._rts = np.zeros(self.n_blocks, np.int32)
         self.ts_shift = 0            # cumulative rebase amount (see above)
         self.stats = LeaseStats()
-        # paged KV payload pool: one row per block, lane-padded so the
-        # gather kernel DMAs aligned rows.  The validity bitmap is host
-        # metadata (whether a slot holds content for its current tag), NOT
-        # protocol state -- it carries no timestamps and never rebases.
+        # page allocator: block ids in [alloc_reserve, n_blocks) are the
+        # allocatable region (decode pages), handed out lowest-id-first;
+        # ids below alloc_reserve stay content-addressed (prefix hashing).
+        self.alloc_reserve = int(alloc_reserve)
+        self._free_pages = list(range(self.n_blocks - 1,
+                                      self.alloc_reserve - 1, -1))
+        # paged KV payload pool: one row per block = ``chunk`` lane-padded
+        # TOKEN rows back to back, so a single decoded token's KV is one
+        # aligned row in the (n_blocks*chunk, token_row) flat view (the
+        # decode kernels' substrate) and a whole block is ``chunk``
+        # consecutive rows (the gather kernel's).  The validity bitmap is
+        # host metadata (whether a slot holds content for its current tag),
+        # NOT protocol state -- it carries no timestamps and never rebases.
         self.kv_block_shape = (tuple(int(s) for s in kv_block_shape)
                                if kv_block_shape else None)
         if self.kv_block_shape:
-            self._kv_elems = int(np.prod(self.kv_block_shape))
+            self.kv_chunk = int(self.kv_block_shape[0])
+            self._kv_token_elems = int(np.prod(self.kv_block_shape[1:]))
             lanes = lease_ops.LANES
-            self._kv_row = -(-self._kv_elems // lanes) * lanes
+            self.kv_token_row = -(-self._kv_token_elems // lanes) * lanes
+            self._kv_row = self.kv_chunk * self.kv_token_row
             if backend == "pallas":
                 self._kv_pool = jnp.zeros((self.n_blocks, self._kv_row),
                                           kv_dtype)
@@ -208,23 +232,28 @@ class LeaseEngine:
     def kv_valid_count(self) -> int:
         return int(self._kv_valid.sum()) if self.has_kv else 0
 
+    def _pack_rows(self, blocks, n: int, xp):
+        """(n, *kv_block_shape) payloads -> (n, row) per-token-padded rows."""
+        pad = ((0, 0), (0, 0),
+               (0, self.kv_token_row - self._kv_token_elems))
+        flat = xp.pad(xp.asarray(blocks).reshape(
+            n, self.kv_chunk, self._kv_token_elems), pad)
+        return flat.reshape(n, self._kv_row)
+
     def write_kv(self, idx, blocks) -> None:
         """Scatter payloads into the pool: blocks (n, *kv_block_shape)."""
         idx = np.atleast_1d(np.asarray(idx, np.int64))
         if not idx.size:
             return
-        pad = ((0, 0), (0, self._kv_row - self._kv_elems))
         if self.backend == "pallas":
-            flat = jnp.pad(jnp.asarray(blocks).reshape(idx.size,
-                                                       self._kv_elems), pad)
+            flat = self._pack_rows(blocks, idx.size, jnp)
             with warnings.catch_warnings():
                 # CPU XLA can't honor the donation; the TPU path does
                 warnings.filterwarnings("ignore", message=".*donated.*")
                 self._kv_pool = _scatter_rows(self._kv_pool,
                                               jnp.asarray(idx), flat)
         else:
-            flat = np.pad(np.asarray(blocks).reshape(idx.size,
-                                                     self._kv_elems), pad)
+            flat = self._pack_rows(blocks, idx.size, np)
             self._kv_pool[idx] = flat.astype(self._kv_pool.dtype)
         self._kv_valid[idx] = True
         self.stats.kv_blocks_written += int(idx.size)
@@ -243,7 +272,8 @@ class LeaseEngine:
         else:
             rows = self._kv_pool[idx]
         self.stats.kv_blocks_read += int(idx.size)
-        return rows[:, :self._kv_elems].reshape(
+        rows = rows.reshape(idx.size, self.kv_chunk, self.kv_token_row)
+        return rows[:, :, :self._kv_token_elems].reshape(
             (idx.size,) + self.kv_block_shape)
 
     def invalidate_kv(self, idx) -> None:
@@ -254,6 +284,82 @@ class LeaseEngine:
         freed = int(self._kv_valid[idx].sum())
         self._kv_valid[idx] = False
         self.stats.kv_evictions += freed
+
+    # -- decode pages: allocator + token-granular append --------------------
+
+    def free_page_count(self) -> int:
+        """Pages left in the allocatable region (admission control bound)."""
+        return len(self._free_pages)
+
+    def alloc_pages(self, n: int) -> np.ndarray:
+        """Pop ``n`` pages off the free list (lowest ids first).  Callers
+        gate admission on :meth:`free_page_count`; running dry here is a
+        scheduling bug, not back-pressure."""
+        if n > len(self._free_pages):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free_pages)}")
+        ids = np.asarray([self._free_pages.pop() for _ in range(n)],
+                         np.int64)
+        self.stats.pages_allocated += int(n)
+        return ids
+
+    def free_pages(self, idx) -> None:
+        """Return pages to the free list the moment a request finishes;
+        their payload slots are invalidated (no messages, like eviction)."""
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        if not idx.size:
+            return
+        if self.has_kv:
+            self._kv_valid[idx] = False
+        for b in sorted((int(b) for b in idx), reverse=True):
+            if not self.alloc_reserve <= b < self.n_blocks:
+                raise ValueError(f"page {b} outside the allocatable region")
+            self._free_pages.append(b)
+        self.stats.pages_freed += int(idx.size)
+
+    def kv_rows_view(self):
+        """The pool as (n_blocks*chunk, token_row) device rows -- the
+        substrate the paged decode step reads and appends against."""
+        pool = self._kv_pool if self.backend == "pallas" \
+            else jnp.asarray(self._kv_pool)
+        return pool.reshape(self.n_blocks * self.kv_chunk, self.kv_token_row)
+
+    def set_kv_rows(self, rows, tokens_appended: int = 0) -> None:
+        """Write back the (possibly donated) rows view after a jitted
+        decode step appended token KV in place."""
+        pool = rows.reshape(self.n_blocks, self._kv_row)
+        if self.backend == "pallas":
+            self._kv_pool = pool
+        else:
+            self._kv_pool = np.asarray(pool)
+        self.stats.kv_tokens_appended += int(tokens_appended)
+
+    def append_kv(self, rows_idx, token_rows) -> None:
+        """Host-side token append: scatter (n, token_elems) rows into flat
+        token slots ``rows_idx`` (= block_id * chunk + slot) through the
+        ``tardis_lease`` scatter kernel.  Marks the touched blocks' slots
+        as holding content (prefill writing a request's own pages)."""
+        rows_idx = np.atleast_1d(np.asarray(rows_idx, np.int64))
+        if not rows_idx.size:
+            return
+        if self.backend == "pallas":
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=".*donat.*")
+                self._kv_pool = lease_ops.append_rows(
+                    self.kv_rows_view(), jnp.asarray(rows_idx, jnp.int32),
+                    jnp.asarray(token_rows).reshape(
+                        rows_idx.size, self._kv_token_elems),
+                    interpret=self.interpret,
+                ).reshape(self.n_blocks, self._kv_row)
+        else:
+            flat = np.zeros((rows_idx.size, self.kv_token_row),
+                            self._kv_pool.dtype)
+            flat[:, :self._kv_token_elems] = np.asarray(token_rows).reshape(
+                rows_idx.size, self._kv_token_elems)
+            view = self._kv_pool.reshape(-1, self.kv_token_row)
+            view[rows_idx] = flat
+        self._kv_valid[np.unique(rows_idx // self.kv_chunk)] = True
+        self.stats.kv_tokens_appended += int(rows_idx.size)
 
     # -- protocol transitions ----------------------------------------------
 
@@ -519,6 +625,10 @@ class LeaseEngine:
             "kv_blocks_written": st.kv_blocks_written,
             "kv_blocks_read": st.kv_blocks_read,
             "kv_evictions": st.kv_evictions,
+            "kv_tokens_appended": st.kv_tokens_appended,
+            "pages_allocated": st.pages_allocated,
+            "pages_freed": st.pages_freed,
+            "free_pages": self.free_page_count(),
             "expired_leases": st.expired,
             "renewals": st.renewals,
             "data_less_renewals": st.data_less,

@@ -1,9 +1,22 @@
-"""Flash-decode Pallas kernel: one query token vs. a long KV cache.
+"""Flash-decode Pallas kernels: one query token vs. a long KV cache.
 
-Grid: (batch * kv_heads, num_kv_blocks) -- the kv dimension is sequential,
-with the GQA group's (m, l, acc) accumulators in VMEM scratch (split-S
-partial softmax).  ``kv_len`` is a *dynamic* scalar (continuous batching!)
-delivered through scalar prefetch so block masking needs no recompilation.
+``_decode_kernel`` is the dense-cache path -- grid (batch * kv_heads,
+num_kv_blocks), the kv dimension sequential, with the GQA group's
+(m, l, acc) accumulators in VMEM scratch (split-S partial softmax).
+``kv_len`` is a *dynamic* scalar (continuous batching!) delivered through
+scalar prefetch so block masking needs no recompilation.
+
+``_paged_decode_kernel`` is the paged-pool path: each request's KV lives in
+LeaseEngine pool pages (one lane-padded row per token, all layers packed),
+named by a per-request page-table row of block ids.  The scalar-prefetched
+page tables drive the K/V input index maps -- the same DMA trick as the
+lease engine's ``_gather_kernel`` -- so grid step (b, j) streams request
+b's j-th page straight from the pool with no host round trip and no
+materialized per-request cache.  Per-request ``lengths`` (also prefetched)
+mask the ragged tail; the current decode token's fresh (k, v) ride in as a
+separate operand folded into the accumulators at j == 0, which keeps the
+append-then-attend ordering of the dense path without re-reading the row
+the step just wrote.
 """
 from __future__ import annotations
 
@@ -82,3 +95,94 @@ def decode_attention_grouped(q, k, v, kv_len, *, scale: float,
         out_shape=jax.ShapeDtypeStruct((bh, g, dh), q.dtype),
         interpret=interpret,
     )(jnp.asarray(kv_len, jnp.int32).reshape(1), q, k, v)
+
+
+def _paged_decode_kernel(scalars_ref, q_ref, cur_k_ref, cur_v_ref, pool_ref,
+                         o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                         chunk: int, k_off: int, v_off: int, hk: int,
+                         dh: int, num_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    kv_len = scalars_ref[b]                           # this request's tokens
+
+    q = q_ref[0].astype(jnp.float32)                  # (hk, g, dh)
+
+    @pl.when(j == 0)
+    def _init():
+        # fold the CURRENT token (always attended, position == kv_len)
+        # into fresh accumulators before any pool page streams in
+        ck = cur_k_ref[0].astype(jnp.float32)         # (hk, dh)
+        cv = cur_v_ref[0].astype(jnp.float32)
+        s0 = jnp.sum(q * ck[:, None, :], axis=-1, keepdims=True) * scale
+        m_scr[...] = s0                               # (hk, g, 1)
+        l_scr[...] = jnp.ones_like(s0)
+        acc_scr[...] = jnp.broadcast_to(cv[:, None, :], acc_scr.shape)
+
+    rows = pool_ref[...]                              # (chunk, token_row)
+    k = rows[:, k_off:k_off + hk * dh].reshape(chunk, hk, dh)
+    v = rows[:, v_off:v_off + hk * dh].reshape(chunk, hk, dh)
+    k = k.astype(jnp.float32).transpose(1, 0, 2)      # (hk, chunk, dh)
+    v = v.astype(jnp.float32).transpose(1, 0, 2)
+    # (hk, g, chunk): contract dh, batch over the kv heads
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,)))) * scale
+    kpos = j * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+    p = jnp.where(m_new <= NEG_INF, 0.0, jnp.exp(s - m_new))
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=2, keepdims=True)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))))
+
+    @pl.when(j == num_pages - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_grouped(q, cur_k, cur_v, pool_rows, page_rows,
+                                   lengths, *, scale: float, chunk: int,
+                                   k_off: int, v_off: int,
+                                   interpret: bool = False):
+    """q: (B, Hkv, G, Dh); cur_k/cur_v: (B, Hkv, Dh) -- the token being
+    decoded; pool_rows: (n_blocks*chunk, token_row) engine pool view;
+    page_rows: (B, P) int32 page tables (entries past a request's pages
+    must be clamped valid); lengths: (B,) int32 tokens already in pages.
+
+    Attends over [pool tokens 0..lengths[b]) ; current token] per request.
+    """
+    b, hk, g, dh = q.shape
+    num_pages = page_rows.shape[1]
+    token_row = pool_rows.shape[1]
+    scalars = jnp.concatenate([
+        jnp.asarray(lengths, jnp.int32).reshape(-1),
+        jnp.asarray(page_rows, jnp.int32).reshape(-1)])
+    grid = (b, num_pages)
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale, chunk=chunk,
+                          k_off=k_off, v_off=v_off, hk=hk, dh=dh,
+                          num_pages=num_pages),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, hk, g, dh), lambda bb, j, _s: (bb, 0, 0, 0)),
+                pl.BlockSpec((1, hk, dh), lambda bb, j, _s: (bb, 0, 0)),
+                pl.BlockSpec((1, hk, dh), lambda bb, j, _s: (bb, 0, 0)),
+                # the page table drives the pool DMA: page j of request bb
+                pl.BlockSpec((chunk, token_row),
+                             lambda bb, j, s: (s[b + bb * num_pages + j], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, hk, g, dh),
+                                   lambda bb, j, _s: (bb, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((hk, g, 1), jnp.float32),
+                pltpu.VMEM((hk, g, 1), jnp.float32),
+                pltpu.VMEM((hk, g, dh), jnp.float32),
+            ]),
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, dh), q.dtype),
+        interpret=interpret,
+    )(scalars, q, cur_k, cur_v, pool_rows)

@@ -1,4 +1,10 @@
-"""Public wrapper: (B, 1, H, Dh) query + (B, T, Hkv, Dh) caches."""
+"""Public wrappers: dense-cache and paged-pool flash decode.
+
+``decode_attention``: (B, 1, H, Dh) query + (B, T, Hkv, Dh) caches.
+``paged_decode_attention``: (B, 1, H, Dh) query + the LeaseEngine pool's
+(n_rows, token_row) view + per-request page tables / lengths + the current
+token's fresh (k, v) -- KV never leaves its pool pages.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,7 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import decode_attention_grouped
+from .kernel import decode_attention_grouped, paged_decode_attention_grouped
 
 
 @partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -28,3 +34,25 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
                                    block_k=block_k, interpret=interpret)
     out = out.reshape(b, hkv, g, -1).reshape(b, h, -1)[..., :dh]
     return out[:, None].reshape(b, 1, h, dh)
+
+
+@partial(jax.jit, static_argnames=("chunk", "k_off", "v_off", "hkv",
+                                   "interpret"))
+def paged_decode_attention(q, cur_k, cur_v, pool_rows, page_rows, lengths,
+                           *, chunk: int, k_off: int, v_off: int, hkv: int,
+                           interpret: bool = False):
+    """q: (B, 1, H, Dh); cur_k/cur_v: (B, 1, Hkv, Dh) (the decode token's
+    fresh KV, already RoPE'd); pool_rows: (n_blocks*chunk, token_row);
+    page_rows: (B, P) int32; lengths: (B,) int32.
+
+    ``k_off`` / ``v_off`` are the layer's static column offsets inside a
+    pool token row (rows pack every layer's K then V contiguously).
+    """
+    b, one, h, dh = q.shape
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    out = paged_decode_attention_grouped(
+        qg, cur_k.reshape(b, hkv, dh), cur_v.reshape(b, hkv, dh),
+        pool_rows, page_rows, lengths, scale=dh ** -0.5, chunk=chunk,
+        k_off=k_off, v_off=v_off, interpret=interpret)
+    return out.reshape(b, 1, h, dh)

@@ -1,7 +1,28 @@
-"""Oracle: naive attention over the valid cache prefix."""
+"""Oracles: naive attention over the valid cache prefix / gathered pages."""
+import jax.numpy as jnp
+
 from ...models.attention import reference_attention
 
 
 def decode_attention_ref(q, k_cache, v_cache, kv_len):
     return reference_attention(q, k_cache, v_cache, causal=False,
                                kv_len=kv_len)
+
+
+def paged_decode_attention_ref(q, cur_k, cur_v, pool_rows, page_rows,
+                               lengths, *, chunk, k_off, v_off, hkv):
+    """Gather-then-attend: materialize each request's pages into a dense
+    cache, place the current token at slot ``lengths[b]``, and run the
+    naive reference over the valid prefix (kv_len = lengths + 1)."""
+    b, one, h, dh = q.shape
+    t = page_rows.shape[1] * chunk
+    rows_idx = (jnp.asarray(page_rows, jnp.int32)[:, :, None] * chunk
+                + jnp.arange(chunk, dtype=jnp.int32)).reshape(b, t)
+    gathered = pool_rows[rows_idx]                    # (B, T, token_row)
+    kc = gathered[..., k_off:k_off + hkv * dh].reshape(b, t, hkv, dh)
+    vc = gathered[..., v_off:v_off + hkv * dh].reshape(b, t, hkv, dh)
+    slot = (jnp.arange(t)[None, :] == jnp.asarray(lengths)[:, None])
+    kc = jnp.where(slot[..., None, None], cur_k.astype(kc.dtype), kc)
+    vc = jnp.where(slot[..., None, None], cur_v.astype(vc.dtype), vc)
+    return reference_attention(q, kc, vc, causal=False,
+                               kv_len=jnp.asarray(lengths) + 1)

@@ -208,6 +208,39 @@ def _gather_kernel(idx_ref, pool_ref, out_ref):
     out_ref[...] = pool_ref[...]
 
 
+def _scatter_kernel(idx_ref, rows_ref, pool_ref, out_ref):
+    del idx_ref, pool_ref            # idx drives the OUTPUT index map; the
+    out_ref[...] = rows_ref[...]     # pool arrives via the in/out alias
+
+
+def scatter_rows(pool, idx, rows, *, interpret: bool = False):
+    """Scatter ``rows`` into ``pool[idx]`` on device: the append-KV path.
+
+    pool (N, W), idx (n,) int32, rows (n, W).  The scalar-prefetched ids
+    drive the *output* BlockSpec's index map and the pool buffer is aliased
+    input->output, so each grid step DMAs exactly one updated row into
+    place and every untouched row keeps its bits -- a decoded token's KV
+    lands in its page without a host round trip.  Rows listed twice keep
+    the last write (the grid is sequential).
+    """
+    n, width = rows.shape
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[
+                pl.BlockSpec((1, width), lambda i, idx_ref: (i, 0)),
+                pl.BlockSpec((1, width), lambda i, idx_ref: (idx_ref[i], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, width),
+                                   lambda i, idx_ref: (idx_ref[i], 0))),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},       # (scalars, rows, POOL) -> out
+        interpret=interpret,
+    )(jnp.asarray(idx, jnp.int32), rows, pool)
+
+
 def gather_rows(pool, idx, *, interpret: bool = False):
     """Gather ``pool[idx]`` rows on device: pool (N, W), idx (n,) int32.
 

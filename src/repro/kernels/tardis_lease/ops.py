@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (LANES, advance_table, gather_rows, lease_table,
-                     lease_table_many)
+                     lease_table_many, scatter_rows)
 
 
 def _pad2d(x, pad, fill=0):
@@ -128,3 +128,18 @@ def lease_check(wts, rts, req_wts, pts, lease, interpret: bool = False):
 def gather_blocks(pool, idx, interpret: bool = False):
     """Materialize pool rows for leased block ids: pool (N, W), idx (n,)."""
     return gather_rows(pool, idx, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def append_rows(pool, idx, rows, interpret: bool = False):
+    """Scatter updated rows into ``pool[idx]`` device-side (append-KV path).
+
+    pool (N, W); idx (n,) int32; rows (n, w) with w <= W (right-padded with
+    zeros to the pool's row width).  Returns the updated pool; the input
+    pool buffer is donated/aliased so no full-pool copy happens on TPU.
+    """
+    w = rows.shape[1]
+    if w != pool.shape[1]:
+        rows = jnp.pad(rows, ((0, 0), (0, pool.shape[1] - w)))
+    return scatter_rows(pool, idx, rows.astype(pool.dtype),
+                        interpret=interpret)

@@ -64,3 +64,12 @@ def write_advance_ref(wts, rts, mask, pts):
 def lease_check_ref(wts, rts, req_wts, pts, lease):
     return masked_lease_check_ref(wts, rts, req_wts, jnp.ones_like(wts),
                                   pts, lease)
+
+
+def append_rows_ref(pool, idx, rows):
+    """Oracle for the append-KV scatter: pool.at[idx].set(rows) with rows
+    right-padded to the pool's row width (last write wins on duplicates)."""
+    w = rows.shape[1]
+    if w != pool.shape[1]:
+        rows = jnp.pad(rows, ((0, 0), (0, pool.shape[1] - w)))
+    return pool.at[jnp.asarray(idx)].set(rows.astype(pool.dtype))

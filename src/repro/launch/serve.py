@@ -25,6 +25,12 @@ def main():
     ap.add_argument("--prefix-len", type=int, default=16,
                     help="shared system-prompt tokens (prefix-KV reuse)")
     ap.add_argument("--prefix-block", type=int, default=8)
+    ap.add_argument("--decode-pages", type=int, default=256,
+                    help="allocator-region pool pages (admission bound)")
+    ap.add_argument("--max-pages", type=int, default=32,
+                    help="page-table length per request")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="continuous-batch slots per replica")
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
@@ -36,7 +42,9 @@ def main():
                              lease=args.lease,
                              prefix_block_tokens=args.prefix_block,
                              kv_lease=16, cache_len=96,
-                             selfinc_period=4)
+                             n_decode_pages=args.decode_pages,
+                             max_pages=args.max_pages,
+                             selfinc_period=4, max_batch=args.max_batch)
     rng = np.random.default_rng(0)
     system = rng.integers(1, cfg.vocab, args.prefix_len).astype(np.int32)
     reqs = [Request(i, np.concatenate(
@@ -52,6 +60,10 @@ def main():
         print(f"paged-KV pool: prefill skipped "
               f"{report['prefix_prefill_tokens_skipped']} prompt tokens, "
               f"{report['prefix_flops_saved']/1e9:.2f} GFLOPs saved")
+    if cluster.paged:
+        print(f"paged decode: {report['kv_tokens_appended']} token rows "
+              f"through pool pages, peak {report['pool_page_peak']} pages "
+              f"in use, {report['pool_pages_freed']} freed")
 
 
 if __name__ == "__main__":

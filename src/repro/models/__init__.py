@@ -1,8 +1,9 @@
 """Model zoo: every assigned architecture family as pure-functional JAX."""
 from .transformer import (abstract_params, forward, init_params, logits_fn,
                           loss_fn)
-from .decoding import decode_step, init_cache, prefill, prefill_suffix
+from .decoding import (PAGED_FAMILIES, decode_step, decode_step_paged,
+                       init_cache, prefill, prefill_suffix)
 
 __all__ = ["abstract_params", "forward", "init_params", "logits_fn",
-           "loss_fn", "decode_step", "init_cache", "prefill",
-           "prefill_suffix"]
+           "loss_fn", "decode_step", "decode_step_paged", "PAGED_FAMILIES",
+           "init_cache", "prefill", "prefill_suffix"]

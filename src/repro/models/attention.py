@@ -92,7 +92,11 @@ def flash_attention(q, k, v, *, causal: bool, q_offset=0,
 
 def reference_attention(q, k, v, *, causal: bool, q_offset=0,
                         window: int = 0, kv_len=None):
-    """Naive masked attention -- test oracle and small-shape path."""
+    """Naive masked attention -- test oracle and small-shape path.
+
+    ``kv_len`` may be a scalar or a per-request (B,) vector (continuous
+    batching: each request's cache fill differs).
+    """
     b, sq, h, dh = q.shape
     _, skv, hkv, _ = k.shape
     g = h // hkv
@@ -101,22 +105,58 @@ def reference_attention(q, k, v, *, causal: bool, q_offset=0,
                    k.astype(jnp.float32)) * dh ** -0.5
     qpos = q_offset + jnp.arange(sq)
     kpos = jnp.arange(skv)
-    mask = jnp.ones((sq, skv), bool)
+    mask = jnp.ones((1, sq, skv), bool)
     if kv_len is not None:
-        mask &= kpos[None, :] < kv_len
+        lim = jnp.asarray(kv_len, jnp.int32).reshape(-1, 1, 1)  # () or (B,)
+        mask &= kpos[None, None, :] < lim
     if causal:
-        mask &= qpos[:, None] >= kpos[None, :]
+        mask &= (qpos[:, None] >= kpos[None, :])[None]
     if window:
-        mask &= kpos[None, :] > (qpos[:, None] - window)
-    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        mask &= (kpos[None, :] > (qpos[:, None] - window))[None]
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bqkgt,btkd->bqkgd", p, v.astype(jnp.float32))
     return out.reshape(b, sq, h, dh).astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, cur_len):
+# Flash-decode kernel routing (``repro.kernels.decode_attention``): eligible
+# GQA shapes go through the Pallas split-KV kernel -- compiled on TPU,
+# interpret-mode fallback elsewhere.  The dense einsum below remains the
+# reference (and the default for small caches, where one fused einsum beats
+# a kernel launch and tests stay pinned to the oracle's exact bits).
+DECODE_KERNEL_MIN_T = 2048
+
+
+def _kernel_eligible(q, k_cache, cur_len, min_t: int) -> bool:
+    b, sq, h, dh = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    if sq != 1 or h % hkv or t < min_t:
+        return False
+    if jnp.ndim(cur_len) != 0:         # per-request lengths: paged path only
+        return False
+    if t % min(512, t):                # kernel block size must tile the cache
+        return False
+    # auto-route only where the kernel compiles (TPU); off-TPU callers can
+    # still force use_kernel=True and get the interpret-mode fallback
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, use_kernel=None,
+                     min_t: int = DECODE_KERNEL_MIN_T):
     """Single-token attention over a cache: q (B, 1, H, Dh),
-    caches (B, T, Hkv, Dh), cur_len = number of valid cache slots."""
+    caches (B, T, Hkv, Dh), cur_len = valid cache slots (scalar or (B,)).
+
+    ``use_kernel=None`` routes eligible GQA shapes (long caches) through
+    the Pallas flash-decode kernel; True forces it; False forces the
+    reference einsum.
+    """
+    if use_kernel is None:
+        use_kernel = _kernel_eligible(q, k_cache, cur_len, min_t)
+    if use_kernel:
+        from ..kernels.decode_attention.ops import \
+            decode_attention as decode_kernel
+        return decode_kernel(q, k_cache, v_cache, cur_len,
+                             interpret=jax.default_backend() != "tpu")
     return reference_attention(q, k_cache, v_cache, causal=False,
                                kv_len=cur_len)
 

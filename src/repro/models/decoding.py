@@ -17,11 +17,16 @@ from .attention import attend
 from .layers import rmsnorm, swiglu
 from .moe import moe_apply
 from .ssm import ssm_block
-from .transformer import (Params, _embed, _head, attn_decode, attn_prefill,
+from .transformer import (Params, _embed, _head, attn_decode,
+                          attn_decode_paged, attn_prefill,
                           attn_prefill_cached, cross_apply, enc_kv_of,
-                          logits_fn)
+                          logits_fn, paged_kv_offsets)
 
 Cache = Dict[str, Any]
+
+# families whose decode KV can live in LeaseEngine pool pages (an SSM state
+# is not position-addressable block-wise; MoE dual cache stacks pending)
+PAGED_FAMILIES = ("dense", "vlm")
 
 
 def _attn_cache(cfg, n, b, t, dtype):
@@ -72,7 +77,9 @@ def init_cache(cfg: ArchConfig, b: int, t: int,
 
 def decode_step(cfg: ArchConfig, p: Params, cache: Cache, tokens,
                 cur_idx) -> Tuple[Cache, jnp.ndarray]:
-    """tokens: (B, 1) int32; cur_idx: int32 scalar (next cache slot).
+    """tokens: (B, 1) int32; cur_idx: int32 scalar (next cache slot) or a
+    (B,) vector for attention-cache families decoding a continuous batch
+    (each request at its own position).
 
     Returns (new_cache, logits (B, 1, V)).
     """
@@ -165,12 +172,81 @@ def decode_step(cfg: ArchConfig, p: Params, cache: Cache, tokens,
     return new_cache, logits_fn(cfg, p, x)
 
 
+def decode_step_paged(cfg: ArchConfig, p: Params, pool_rows, page_rows,
+                      lengths, tokens, *, chunk: int,
+                      interpret: bool = False, use_kernel=None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step where every KV byte lives in LeaseEngine pool pages.
+
+    ``pool_rows``: the engine pool's (n_blocks*chunk, token_row) view (one
+    lane-padded row per token, all layers packed); ``page_rows``: (B, P)
+    int32 per-request page tables (entries past a request's pages clamped
+    to a valid id -- they are masked by ``lengths``); ``lengths``: (B,)
+    int32 tokens already in pages (== the decode position); ``tokens``:
+    (B, 1) int32.  Returns (new_pool_rows, logits (B, 1, V)): every
+    layer's fresh KV for the new token is accumulated into ONE token row
+    and scattered into its page by the ``tardis_lease`` append kernel --
+    no host round trip, no dense per-request cache anywhere.
+
+    The layer loop is unrolled (the pool is one shared buffer, not a
+    per-layer scan operand); serving configs keep n_layers small, and the
+    unrolled body is bit-identical to the scanned dense path.
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged decode supports attention-cache families, "
+            f"not {cfg.family!r}")
+    from ..dist.annotate import replicate
+    from ..kernels.tardis_lease.kernel import scatter_rows
+
+    x = jnp.take(p["embed"], tokens, axis=0)
+    b = x.shape[0]
+    hkd = cfg.n_kv_heads * cfg.head_dim()
+    lengths = jnp.asarray(lengths, jnp.int32)
+    row_buf = jnp.zeros((b, 2 * cfg.n_layers * hkd), pool_rows.dtype)
+    for l in range(cfg.n_layers):
+        layer = jax.tree.map(lambda t, l=l: t[l], p["layers"])
+        x = replicate(x)
+        y, kd, vd = attn_decode_paged(
+            layer["attn"], cfg, x, pool_rows, page_rows, lengths, l,
+            chunk=chunk, interpret=interpret, use_kernel=use_kernel)
+        x = x + y
+        xn = rmsnorm(x, layer["mlp_norm"], cfg.norm_eps)
+        x = x + swiglu(layer["mlp"], xn)
+        k_off, v_off = paged_kv_offsets(cfg, l)
+        row_buf = row_buf.at[:, k_off:k_off + hkd].set(kd.reshape(b, hkd))
+        row_buf = row_buf.at[:, v_off:v_off + hkd].set(vd.reshape(b, hkd))
+    # ONE append per step: the token's whole row (every layer's K and V)
+    # lands in its page via the scalar-prefetched scatter kernel
+    flat_idx = (page_rows[jnp.arange(b), lengths // chunk] * chunk
+                + lengths % chunk)
+    pad = pool_rows.shape[1] - row_buf.shape[1]
+    if pad:
+        row_buf = jnp.pad(row_buf, ((0, 0), (0, pad)))
+    pool_rows = scatter_rows(pool_rows, flat_idx, row_buf,
+                             interpret=interpret)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return pool_rows, logits_fn(cfg, p, x)
+
+
 # ---------------------------------------------------------------------------
 # Prefill: full forward that also materializes the caches
 # ---------------------------------------------------------------------------
 
+def _last_logits(cfg, p, x, last_idx):
+    """Logits at the prompt's true last position: ``last_idx=None`` keeps
+    the trailing position (the unpadded case); a traced index lets callers
+    right-pad prompts to a shape bucket (bounding retraces) and still read
+    the real last token -- causality makes positions < last_idx identical
+    bits either way."""
+    if last_idx is None:
+        return logits_fn(cfg, p, x[:, -1:])
+    return logits_fn(cfg, p, jax.lax.dynamic_slice_in_dim(
+        x, jnp.asarray(last_idx, jnp.int32), 1, 1))
+
+
 def prefill(cfg: ArchConfig, p: Params, batch, cache_len: int,
-            dtype=jnp.bfloat16) -> Tuple[Cache, jnp.ndarray]:
+            dtype=jnp.bfloat16, last_idx=None) -> Tuple[Cache, jnp.ndarray]:
     """Processes the prompt, returns (cache, last-token logits)."""
     fam = cfg.family
     if fam == "encdec":
@@ -232,12 +308,12 @@ def prefill(cfg: ArchConfig, p: Params, batch, cache_len: int,
                      conv=jnp.concatenate(convs),
                      ak=jnp.stack(aks), av=jnp.stack(avs))
     x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
-    logits = logits_fn(cfg, p, x[:, -1:])
-    return cache, logits
+    return cache, _last_logits(cfg, p, x, last_idx)
 
 
 def prefill_suffix(cfg: ArchConfig, p: Params, batch, cache: Cache,
-                   prefix_len: int) -> Tuple[Cache, jnp.ndarray]:
+                   prefix_len: int, last_idx=None) -> Tuple[Cache,
+                                                            jnp.ndarray]:
     """Chunked prefill that skips the prompt's leased prefix.
 
     ``cache`` arrives with its first ``prefix_len`` slots already holding
@@ -267,7 +343,7 @@ def prefill_suffix(cfg: ArchConfig, p: Params, batch, cache: Cache,
 
     x, (k, v) = jax.lax.scan(body, x, (p["layers"], cache["k"], cache["v"]))
     x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
-    return {"k": k, "v": v}, logits_fn(cfg, p, x[:, -1:])
+    return {"k": k, "v": v}, _last_logits(cfg, p, x, last_idx)
 
 
 def _encdec_prefill(cfg, p, batch, cache_len, dtype=jnp.bfloat16):

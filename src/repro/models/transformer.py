@@ -110,18 +110,85 @@ def attn_prefill_cached(p, cfg, x, positions, kc, vc, prefix_len: int):
 
 
 def attn_decode(p, cfg, x, kc, vc, cur_idx):
-    """One-token decode: insert k/v at cur_idx, attend over cache."""
+    """One-token decode: insert k/v at cur_idx, attend over cache.
+
+    ``cur_idx`` is a scalar (a wave decoding in lockstep) or a (B,) vector
+    (continuous batching: each request at its own position).
+    """
     b = x.shape[0]
     xn = rmsnorm(x, p["norm"], cfg.norm_eps)
     q, k, v = _qkv(p, cfg, xn)
-    pos = jnp.full((b, 1), cur_idx, jnp.int32)
+    cur = jnp.asarray(cur_idx, jnp.int32)
+    pos = jnp.full((b, 1), cur, jnp.int32) if cur.ndim == 0 else cur[:, None]
     q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope)
     k = apply_rope(k, pos, cfg.rope_theta, cfg.mrope)
-    kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, cur_idx, 0, 0))
-    vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, cur_idx, 0, 0))
-    out = decode_attention(q, kc, vc, cur_idx + 1)
+    if cur.ndim == 0:
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, cur, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, cur, 0, 0))
+    else:
+        slot = jnp.arange(kc.shape[1], dtype=jnp.int32)[None, :] == pos
+        kc = jnp.where(slot[..., None, None], k.astype(kc.dtype), kc)
+        vc = jnp.where(slot[..., None, None], v.astype(vc.dtype), vc)
+    out = decode_attention(q, kc, vc, cur + 1)
     y = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, -1), p["wo"])
     return y, kc, vc
+
+
+def paged_kv_offsets(cfg, layer: int):
+    """Static column offsets of a layer's K and V inside a pool token row
+    (rows pack (kv, layer*head, dh): all layers' K, then all layers' V)."""
+    hkd = cfg.n_kv_heads * cfg.head_dim()
+    return layer * hkd, (cfg.n_layers + layer) * hkd
+
+
+def attn_decode_paged(p, cfg, x, pool_rows, page_rows, lengths, layer: int,
+                      *, chunk: int, interpret: bool = False,
+                      use_kernel=None):
+    """One-token decode where the KV cache lives in LeaseEngine pool pages.
+
+    ``pool_rows`` is the engine pool's (n_blocks*chunk, token_row) view;
+    ``page_rows`` (B, P) int32 names each request's pages (prefix blocks
+    shared under leases + privately allocated decode pages); ``lengths``
+    (B,) counts the tokens already in pages.  Returns (y, k_cur, v_cur):
+    the fresh RoPE'd KV in pool dtype -- the caller accumulates every
+    layer's slice into one token row and appends it once per step.
+
+    ``use_kernel=None`` routes through the Pallas paged flash-decode kernel
+    on TPU; the default elsewhere is gather-then-reference, which is
+    bit-exact with the dense-cache decode path.
+    """
+    b = x.shape[0]
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, cfg, xn)
+    pos = jnp.asarray(lengths, jnp.int32)[:, None]
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.mrope)
+    hk, dh = cfg.n_kv_heads, cfg.head_dim()
+    k_off, v_off = paged_kv_offsets(cfg, layer)
+    kd, vd = k.astype(pool_rows.dtype), v.astype(pool_rows.dtype)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from ..kernels.decode_attention.ops import paged_decode_attention
+        out = paged_decode_attention(
+            q, kd, vd, pool_rows, page_rows, jnp.asarray(lengths, jnp.int32),
+            chunk=chunk, k_off=k_off, v_off=v_off, hkv=hk,
+            interpret=interpret)
+    else:
+        t = page_rows.shape[1] * chunk
+        rows_idx = (jnp.asarray(page_rows, jnp.int32)[:, :, None] * chunk
+                    + jnp.arange(chunk, dtype=jnp.int32)).reshape(b, t)
+        gathered = pool_rows[rows_idx]                # (B, T, token_row)
+        kc = gathered[..., k_off:k_off + hk * dh].reshape(b, t, hk, dh)
+        vc = gathered[..., v_off:v_off + hk * dh].reshape(b, t, hk, dh)
+        slot = jnp.arange(t, dtype=jnp.int32)[None, :] == pos
+        kc = jnp.where(slot[..., None, None], kd, kc)
+        vc = jnp.where(slot[..., None, None], vd, vc)
+        out = decode_attention(q, kc, vc, pos[:, 0] + 1, use_kernel=False)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, 1, -1), p["wo"])
+    return y, kd, vd
 
 
 def cross_apply(p, cfg, x, enc_kv):

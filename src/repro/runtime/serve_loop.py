@@ -1,35 +1,47 @@
-"""Tardis-coherent serving engine: continuous batching + leased weights/KV.
+"""Tardis-coherent serving engine: continuous batching over paged pool KV.
 
 Multiple decode replicas serve requests against
   * a shared *weight version* (hot-swapped by a trainer/publisher), and
-  * a shared paged prefix-KV block store (RadixAttention-style reuse),
+  * a shared paged KV pool (RadixAttention-style prefix reuse),
 both coherent through Tardis leases: replicas hold leases, renew on expiry
 (data-less when unchanged -- the common case), and a weight publish never
 broadcasts: it jumps ahead of all outstanding leases.  Metadata is O(log N)
 per object; there is no sharer list in the system.
 
-Weights go through :class:`repro.core.store.TardisStore`; the prefix-KV
-block table is a :class:`repro.core.lease_engine.LeaseEngine` whose
-read/renew/write-jump-ahead transitions run in the ``tardis_lease`` Pallas
-kernel.  Prefill hashes prompt-prefix chunks to block ids (content
-addressing, CRC-chained so a block id names the *whole* prefix up to that
-chunk); blocks whose content tag matches are leased -- locally when the
-replica's lease still covers its pts, by data-less renewal when the version
-is unchanged, by payload transfer otherwise -- and new prefixes are written
-with the jump-ahead rule, evicting colliding tags without any invalidation
-(readers of the old content keep their leases, exactly the paper's stale-
-but-SC-legal window).
+Weights go through :class:`repro.core.store.TardisStore`; the KV pool is a
+:class:`repro.core.lease_engine.LeaseEngine` whose read/renew/write-jump-
+ahead transitions run in the ``tardis_lease`` Pallas kernels.
 
-Leased blocks carry the *actual* paged KV tensors: the engine's pool holds
-one ``(chunk, 2, n_layers*kv_heads, head_dim)`` payload per block, filled
-by write-back after a wave prefills a new prefix and materialized through
-the Pallas gather kernel when a later wave hits -- prefill then runs only
-the suffix (``models.prefill_suffix``), skipping the prefix's attention and
-MLP entirely (``prefix_flops_saved`` in the coherence report).  The lease
-protocol itself is batched per wave: one logical tick, one
-``read_many`` kernel dispatch for every renewal in the wave and at most one
-jump-ahead write over the union of its misses, instead of per-request
-full-table passes.
+**Paged serving (dense/vlm).**  Every KV byte a decode step touches lives
+in LeaseEngine pool pages; there is no dense per-request cache on this
+path.  The pool is split into a content-addressed region (prompt-prefix
+chunks chain-hashed to block ids, shared across requests under leases) and
+an allocator region (private decode pages, free-listed).  A request's page
+table names its covered shared-prefix blocks followed by its own pages;
+prefill scatters the prompt's suffix KV into the own pages
+(``LeaseEngine.append_kv``) and each decode step appends the new token's
+KV through the ``tardis_lease`` scatter kernel inside the jitted step
+(:func:`repro.models.decode_step_paged`) -- no host round trip.  Decode
+attention streams K/V straight out of the pool (the gather path is
+bit-exact with the dense-cache decode; the Pallas paged flash-decode
+kernel is routed on TPU).
+
+The request loop is a **continuous-batching scheduler**: requests join a
+replica's running batch as soon as a batch slot and enough free pool pages
+exist (admission is bounded by ``free_page_count``), finish independently,
+and release their pages immediately.  Covered prefix blocks stay pinned
+and leased for the whole decode -- decode-time re-reads of shared blocks
+are the renewal-dominated pattern Tardis 2.0 lease tuning targets, and
+expired leases renew (data-less) in one batched ``read_many`` per tick.  A
+collision eviction hitting a pinned block relocates its payload into a
+freshly allocated page and remaps the active page tables (zero messages;
+readers of the old content keep reading their bits), so content
+re-addressing can never corrupt an in-flight decode.
+
+The lease protocol is batched per admission group: one logical tick, one
+``read_many`` dispatch for every renewal and at most one jump-ahead write
+over the union of the misses.  moe/ssm/hybrid families (whose caches are
+not block-addressable yet) fall back to the fixed-wave dense-cache loop.
 
 The engine is single-process (replicas are cooperative objects) but every
 coherence message is accounted in flits, so benchmarks can compare against
@@ -38,7 +50,9 @@ a directory-style invalidation broadcast on the same request stream.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import zlib
+from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -47,11 +61,12 @@ import numpy as np
 
 from ..core.lease_engine import LeaseEngine
 from ..core.store import Replica, TardisStore
-from ..models import decode_step, init_cache, prefill, prefill_suffix
+from ..models import (PAGED_FAMILIES, decode_step, decode_step_paged,
+                      prefill, prefill_suffix)
 
 # families whose prefill KV cache is position-addressable block-wise, i.e.
-# can be carried through the paged prefix-KV pool (an SSM state cannot).
-KV_POOL_FAMILIES = ("dense", "vlm")
+# can be carried through the paged KV pool (an SSM state cannot).
+KV_POOL_FAMILIES = PAGED_FAMILIES
 
 
 @dataclasses.dataclass
@@ -67,29 +82,38 @@ class Request:
 class WavePlan:
     """Outcome of the per-wave batched lease protocol for one wave.
 
-    ``groups`` holds each request's prefix block ids; ``skip_tokens`` /
-    ``skip_bids`` name the pool-backed common prefix prefill may skip
-    (pool-valid *before* this wave, identical bids across the wave);
-    ``miss_writers`` maps each newly-written block id to the
+    ``groups`` holds each request's prefix block ids; ``covered[i]`` is how
+    many leading blocks of request i are pool-backed (tag match + payload
+    valid *before* this wave), already clamped against the request's own
+    prompt length so at least one token is always left for prefill -- the
+    clamp lives HERE, in the plan, so the plan and the serve side can never
+    disagree about it (the old code recomputed the wave minimum at serve
+    time).  ``miss_writers`` maps each newly-written block id to the
     ``(request_index, chunk_index)`` whose prefill output backs it, and
     ``repair_writers`` the tag-hit blocks whose pool slot is invalid (e.g.
     freed by a weight publish) and gets repopulated by this wave's prefill.
     """
     groups: List[List[int]]
-    skip_tokens: int
-    skip_bids: List[int]
+    covered: List[int]
     miss_writers: Dict[int, Tuple[int, int]]
     repair_writers: Dict[int, Tuple[int, int]]
 
 
-def _prefix_cache(kp, vp, batch, cache_len: int, skip: int):
-    """Per-layer (L, skip, hk, dh) leased prefix KV -> a wave's
-    (L, B, cache_len, hk, dh) decode cache with the prefix pre-filled."""
-    shape = (kp.shape[0], batch, cache_len) + kp.shape[2:]
-    kc = jnp.zeros(shape, jnp.bfloat16)
-    vc = jnp.zeros(shape, jnp.bfloat16)
-    return {"k": kc.at[:, :, :skip].set(kp[:, None].astype(jnp.bfloat16)),
-            "v": vc.at[:, :, :skip].set(vp[:, None].astype(jnp.bfloat16))}
+@dataclasses.dataclass
+class Stream:
+    """One in-flight request on the paged path: its page table and nothing
+    else -- the KV itself lives in the engine's pool pages."""
+    req: Request
+    page_row: np.ndarray             # (max_pages,) int32 block ids
+    own_pages: List[int]             # allocator-region pages (freed at end)
+    shared_bids: List[int]           # pinned content blocks (leased)
+    reloc_pages: List[int]           # eviction-relocated private copies
+    length: int                      # tokens currently in pages
+    emitted: List[int]
+
+    @property
+    def finished(self) -> bool:
+        return len(self.emitted) >= self.req.max_new
 
 
 class DecodeReplica:
@@ -114,19 +138,10 @@ class DecodeReplica:
         # says it is the content this request wants (collision evictions
         # re-tag blocks without invalidating anybody).
         self.kv_leases: Dict[int, Tuple[int, int, int]] = {}
-        self.last_prefill_cache = None   # wave's KV, read by pool write-back
         self._decode = jax.jit(
             lambda p, c, t, i: decode_step(cfg, p, c, t, i))
         self._prefill = jax.jit(
             lambda p, b: prefill(cfg, p, b, cache_len))
-        # the prefix cache is assembled INSIDE the jit so XLA fuses the
-        # zeros + prefix scatter instead of shipping full caches as inputs
-        self._prefill_suffix = jax.jit(
-            lambda p, b, kp, vp, n: prefill_suffix(
-                cfg, p, b,
-                _prefix_cache(kp, vp, b["tokens"].shape[0], cache_len, n),
-                n),
-            static_argnums=4)
 
     def params(self):
         """Weight access through the lease (renewal-on-expiry)."""
@@ -142,18 +157,9 @@ class DecodeReplica:
             bid: (max(0, w - shift), r - shift, t)
             for bid, (w, r, t) in self.kv_leases.items() if r >= shift}
 
-    def serve(self, reqs: List[Request], prefix_kv=None,
-              skip: int = 0, params=None) -> List[Request]:
-        """Greedy-decode a wave of requests (one continuous batch).
-
-        When ``prefix_kv`` carries the wave's shared leased prefix --
-        per-layer ``(k, v)`` of shape (L, skip, kv_heads, head_dim),
-        materialized from the engine's paged pool -- prefill runs only on
-        the suffix tokens, skipping the prefix's attention + MLP.
-        ``params`` may be preloaded by the caller (the cluster reads the
-        weight lease first so it can match pool KV to the weight version
-        this prefill will actually use).
-        """
+    def serve(self, reqs: List[Request], params=None) -> List[Request]:
+        """Dense-cache fallback: greedy-decode a fixed wave of requests
+        (moe/ssm/hybrid families, whose caches are not block-addressable)."""
         if not reqs:
             return reqs
         if params is None:
@@ -162,15 +168,7 @@ class DecodeReplica:
         toks = np.zeros((len(reqs), s), np.int32)
         for i, r in enumerate(reqs):
             toks[i, :len(r.prompt)] = r.prompt
-        if prefix_kv is not None and 0 < skip < s:
-            kp, vp = prefix_kv
-            cache, logits = self._prefill_suffix(
-                params, {"tokens": jnp.asarray(toks[:, skip:])},
-                kp, vp, int(skip))
-        else:
-            cache, logits = self._prefill(params,
-                                          {"tokens": jnp.asarray(toks)})
-        self.last_prefill_cache = cache
+        cache, logits = self._prefill(params, {"tokens": jnp.asarray(toks)})
         outs = [[] for _ in reqs]
         cur = jnp.int32(s)
         next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
@@ -188,14 +186,25 @@ class DecodeReplica:
         return reqs
 
 
+def _prefix_cache(kp, vp, batch, cache_len: int, skip: int):
+    """Per-layer (L, skip, hk, dh) leased prefix KV -> a request's
+    (L, B, cache_len, hk, dh) prefill cache with the prefix pre-filled."""
+    shape = (kp.shape[0], batch, cache_len) + kp.shape[2:]
+    kc = jnp.zeros(shape, jnp.bfloat16)
+    vc = jnp.zeros(shape, jnp.bfloat16)
+    return {"k": kc.at[:, :, :skip].set(kp[:, None].astype(jnp.bfloat16)),
+            "v": vc.at[:, :, :skip].set(vp[:, None].astype(jnp.bfloat16))}
+
+
 class ServingCluster:
-    """N replicas + weight publisher + shared prefix-KV block table."""
+    """N replicas + weight publisher + shared paged-KV LeaseEngine pool."""
 
     def __init__(self, cfg, init_params_fn: Callable[[], Any],
                  n_replicas: int = 2, lease: int = 10,
                  n_prefix_blocks: int = 4096, prefix_block_tokens: int = 16,
                  kv_lease: int = 64, prefix_reuse: bool = True,
                  ts_bits: int = 30, prefix_backend: str = "pallas",
+                 n_decode_pages: int = 512, max_pages: int = 32,
                  **replica_kw):
         self.cfg = cfg
         self.store = TardisStore(lease=lease)
@@ -211,40 +220,83 @@ class ServingCluster:
         self.replicas = [
             DecodeReplica(cfg, self.store, f"replica{i}", **replica_kw)
             for i in range(n_replicas)]
-        # paged prefix-KV blocks: lease metadata + real KV payloads (for
-        # attention-cache families) in one engine.
+        # the paged pool: a content-addressed region (chain-hashed prompt
+        # prefixes, shared under leases) + an allocator region (private
+        # decode pages), one engine, one payload pool.
         self.prefix_block_tokens = int(prefix_block_tokens)
         self.prefix_reuse = bool(prefix_reuse)
+        self.n_prefix_blocks = int(n_prefix_blocks)
+        self.n_decode_pages = int(n_decode_pages)
+        self.max_pages = int(max_pages)
         kv_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim()
                     * 4 * self.prefix_block_tokens)
         kv_shape = None
         if self.prefix_reuse and cfg.family in KV_POOL_FAMILIES:
             kv_shape = (self.prefix_block_tokens, 2,
                         cfg.n_layers * cfg.n_kv_heads, cfg.head_dim())
+        n_blocks = self.n_prefix_blocks + (self.n_decode_pages
+                                           if kv_shape else 0)
         self.prefix_engine = LeaseEngine(
-            n_prefix_blocks, lease=kv_lease, block_bytes=kv_bytes,
+            n_blocks, lease=kv_lease, block_bytes=kv_bytes,
             ts_bits=ts_bits, backend=prefix_backend,
-            kv_block_shape=kv_shape)
-        self._tags = np.full(n_prefix_blocks, -1, np.int64)  # content hashes
-        # weight version each pool slot's KV was computed under: a wave may
-        # only skip prefill on KV matching the weights it will serve with
+            kv_block_shape=kv_shape, alloc_reserve=self.n_prefix_blocks)
+        self._tags = np.full(n_blocks, -1, np.int64)       # content hashes
+        # weight version each pool slot's KV was computed under: a request
+        # may only reuse KV matching the weights it will serve with
         # (same-version staleness is SC-legal; cross-version mixing is not)
-        self._pool_wver = np.full(n_prefix_blocks, -1, np.int64)
+        self._pool_wver = np.full(n_blocks, -1, np.int64)
+        # paged-decode bookkeeping: pin counts on shared content blocks
+        # referenced by in-flight page tables, refcounts on relocated
+        # private copies, and the live scheduler's active streams.
+        self._pins: Dict[int, int] = {}
+        self._reloc_refs: Dict[int, int] = {}
+        self._admit_reserved = 0          # pages promised to joiners in
+        #                                   flight (relocation may not eat)
+        self._active: List[List[Stream]] = [[] for _ in self.replicas]
+        self.trace: Optional[List[Dict]] = None   # test/debug hook
         self.prefix_stats = {
             "prefix_block_hits": 0, "prefix_local_hits": 0,
             "prefix_renewals": 0, "prefix_block_misses": 0,
-            "prefix_evictions": 0, "prefix_tokens_reused": 0,
+            "prefix_evictions": 0, "prefix_evictions_deferred": 0,
+            "prefix_tokens_reused": 0,
             "prefix_prefill_tokens_skipped": 0, "prefix_flops_saved": 0,
+            "decode_renewals": 0, "decode_local_hits": 0,
+            "decode_block_reads": 0,
+            "pinned_relocations": 0, "paged_mid_batch_admissions": 0,
+            "paged_admission_deferrals": 0, "pool_page_peak": 0,
         }
+        self.paged = self.prefix_engine.has_kv
+        if self.paged:
+            interp = self.prefix_engine.interpret
+            ch = self.prefix_block_tokens
+            self._decode_paged_fn = jax.jit(
+                lambda p, pool, pr, ln, tk: decode_step_paged(
+                    cfg, p, pool, pr, ln, tk, chunk=ch, interpret=interp),
+                donate_argnums=(1,))
+            # admission prefills are right-padded to a block multiple with
+            # the true last position a traced index, so retraces are
+            # bounded by (cache_len, skip) buckets, not request lengths
+            self._prefill_fn = jax.jit(
+                lambda p, b, cl, li: prefill(cfg, p, b, cl, last_idx=li),
+                static_argnums=2)
+            self._psuffix_fn = jax.jit(
+                lambda p, b, kp, vp, n, cl, li: prefill_suffix(
+                    cfg, p, b,
+                    _prefix_cache(kp, vp, b["tokens"].shape[0], cl, n), n,
+                    last_idx=li),
+                static_argnums=(4, 5))
 
     def publish_weights(self, params) -> int:
         """Hot-swap: no invalidation broadcast; replicas renew on expiry.
 
-        The prefix-KV pool's payloads were computed under the OLD weights,
-        and pool validity (unlike a lease) never expires -- so the publish
-        frees every pool slot locally (a manager-side bitmap clear, zero
-        messages to replicas; tags and lease metadata stay).  Later waves
+        The pool's payloads were computed under the OLD weights, and pool
+        validity (unlike a lease) never expires -- so the publish frees
+        every pool slot locally (a manager-side bitmap clear, zero messages
+        to replicas; tags and lease metadata stay).  Later admissions
         repair the slots from their own prefill (``repair_writers``).
+        In-flight decodes keep reading their pages' payload bits -- within
+        one request a single weight version keeps serving, which is the
+        same-version staleness rule, not mixing.
         """
         self.publisher.write("params", params, nbytes=self.param_bytes)
         if self.prefix_engine.has_kv:
@@ -252,7 +304,7 @@ class ServingCluster:
                 np.arange(self.prefix_engine.n_blocks))
         return self.publisher.pts
 
-    # -- prefix-KV reuse ----------------------------------------------------
+    # -- prefix-KV content addressing ---------------------------------------
 
     def _prefix_blocks_of(self, prompt: np.ndarray) -> Tuple[List[int],
                                                              List[int]]:
@@ -263,9 +315,38 @@ class ServingCluster:
         for c in range(len(prompt) // bt):
             h = zlib.crc32(np.ascontiguousarray(
                 prompt[c * bt:(c + 1) * bt]).tobytes(), h)
-            bids.append(h % self.prefix_engine.n_blocks)
+            bids.append(h % self.n_prefix_blocks)
             tags.append(h)
         return bids, tags
+
+    def _evict_block(self, bid: int) -> bool:
+        """Collision eviction of a content block about to be re-tagged.
+
+        If in-flight page tables reference it (pinned), its payload first
+        relocates to a freshly allocated private page and the active
+        streams remap -- zero messages, the old content keeps its bits.
+        Returns False when the block is pinned but no free page exists
+        (the new content stays uncacheable this wave)."""
+        if self.prefix_engine.has_kv and self._pins.get(bid, 0):
+            if (self.prefix_engine.free_page_count()
+                    - self._admit_reserved) < 1:
+                return False
+            new = int(self.prefix_engine.alloc_pages(1)[0])
+            self.prefix_engine.write_kv([new],
+                                        self.prefix_engine.read_kv([bid]))
+            self._pool_wver[new] = self._pool_wver[bid]
+            self._reloc_refs[new] = self._pins.pop(bid)
+            for act in self._active:
+                for s in act:
+                    if bid in s.shared_bids:
+                        s.shared_bids.remove(bid)
+                        s.reloc_pages.append(new)
+                        s.page_row = np.where(s.page_row == bid, new,
+                                              s.page_row).astype(np.int32)
+            self.prefix_stats["pinned_relocations"] += 1
+        if self.prefix_engine.has_kv:
+            self.prefix_engine.invalidate_kv([bid])
+        return True
 
     def _lease_prefix(self, rep: DecodeReplica, prompt: np.ndarray) -> None:
         """Single-request compatibility wrapper: a wave of one."""
@@ -293,20 +374,16 @@ class ServingCluster:
             groups.append(bids)
             tags_by_req.append(tags)
         # pool-backed leading blocks per request, against the PRE-wave pool
-        # (blocks written later this wave aren't materialized yet).
+        # (blocks written later this wave aren't materialized yet); clamped
+        # so at least one prompt token remains for prefill to compute.
         covered = []
-        for bids, tags in zip(groups, tags_by_req):
+        for prompt, bids, tags in zip(prompts, groups, tags_by_req):
             c = 0
             for bid, tag in zip(bids, tags):
                 if self._tags[bid] != tag or not self.prefix_engine.kv_ok(bid):
                     break
                 c += 1
-            covered.append(c)
-        skip_blocks = min(covered) if covered else 0
-        while skip_blocks and any(g[:skip_blocks] != groups[0][:skip_blocks]
-                                  for g in groups):
-            skip_blocks -= 1         # hash collision: bids diverge, back off
-        skip_bids = list(groups[0][:skip_blocks]) if skip_blocks else []
+            covered.append(min(c, (len(prompt) - 1) // bt))
 
         local_wts: List[int] = []
         renew_groups: List[List[int]] = [[] for _ in prompts]
@@ -336,10 +413,12 @@ class ServingCluster:
                             renew_req[bid] = ent[0] if cached_ok else -1
                 else:
                     if self._tags[bid] != -1:
+                        if not self._evict_block(bid):
+                            # pinned + no free page: leave the old tag in
+                            # place; this chunk stays uncacheable this wave
+                            ps["prefix_evictions_deferred"] += 1
+                            continue
                         ps["prefix_evictions"] += 1    # collision: re-tag
-                        if self.prefix_engine.has_kv:
-                            # the slot's payload no longer matches its tag
-                            self.prefix_engine.invalidate_kv([bid])
                     ps["prefix_block_misses"] += 1
                     self._tags[bid] = tag
                     miss_writers[bid] = (ri, c)        # last writer wins
@@ -365,8 +444,7 @@ class ServingCluster:
         # a repair superseded by a same-wave eviction defers to the miss
         repair_writers = {b: rc for b, rc in repair_writers.items()
                           if b not in miss_writers}
-        return WavePlan(groups, skip_blocks * bt, skip_bids, miss_writers,
-                        repair_writers)
+        return WavePlan(groups, covered, miss_writers, repair_writers)
 
     def _maybe_rebase(self) -> None:
         shift = self.prefix_engine.maybe_rebase()
@@ -388,7 +466,7 @@ class ServingCluster:
         return kv[0], kv[1]
 
     def _cache_block_kv(self, cache, ri: int, chunk: int) -> jnp.ndarray:
-        """One request's prefix chunk out of a wave's prefill cache, in the
+        """One request's prefix chunk out of a prefill cache, in the
         pool's (chunk, 2, L*hk, dh) block layout."""
         bt = self.prefix_block_tokens
         lo = chunk * bt
@@ -398,66 +476,287 @@ class ServingCluster:
         return kv.transpose(2, 0, 1, 3, 4).reshape(
             bt, 2, layers * hk, self.cfg.head_dim())
 
-    def _writeback_prefix(self, rep: DecodeReplica, plan: WavePlan,
-                          wver: Optional[int]) -> None:
-        """Publish the wave's freshly-prefilled prefix blocks into the pool
-        (the payload half of the jump-ahead writes already issued), plus
-        repairs of freed slots whose tag still matches.  ``wver`` is the
-        weight version the wave's prefill ran under; it tags the slots."""
-        cache = rep.last_prefill_cache
-        if cache is None or "k" not in cache:
+    def _cache_token_rows(self, cache, lo: int, hi: int) -> np.ndarray:
+        """Positions [lo, hi) of a B=1 prefill cache as (hi-lo, token_elems)
+        pool token rows (all layers' K then V, the pool's packing)."""
+        k = np.asarray(cache["k"][:, 0, lo:hi])       # (L, m, hk, dh)
+        v = np.asarray(cache["v"][:, 0, lo:hi])
+        m = hi - lo
+        kr = k.transpose(1, 0, 2, 3).reshape(m, -1)
+        vr = v.transpose(1, 0, 2, 3).reshape(m, -1)
+        return np.concatenate([kr, vr], axis=1)
+
+    # -- continuous-batching paged scheduler --------------------------------
+
+    def _pages_needed(self, req: Request, covered: int = 0) -> int:
+        bt = self.prefix_block_tokens
+        total = -(-(len(req.prompt) + req.max_new) // bt)
+        return total - covered
+
+    def _admit(self, r: int, rep: DecodeReplica, queue: deque,
+               act: List[Stream], tick: int) -> None:
+        """Admit queued requests into the replica's running batch while a
+        batch slot and enough free pool pages exist (worst case: no prefix
+        coverage).  One lease interaction covers the whole joiner group."""
+        eng = self.prefix_engine
+        joiners: List[Request] = []
+        budget = eng.free_page_count()
+        while queue and len(act) + len(joiners) < rep.max_batch:
+            req = queue[0]
+            need = self._pages_needed(req)
+            if need > self.max_pages:
+                raise ValueError(
+                    f"request {req.rid} needs {need} pages > max_pages="
+                    f"{self.max_pages}")
+            if need > budget:
+                if not act and not joiners and need > self.n_decode_pages:
+                    raise RuntimeError(
+                        f"request {req.rid} needs {need} pages; pool has "
+                        f"{self.n_decode_pages}")
+                self.prefix_stats["paged_admission_deferrals"] += 1
+                break                       # head-of-line: wait for pages
+            budget -= need
+            joiners.append(queue.popleft())
+        if not joiners:
             return
-        writers = {**plan.repair_writers, **plan.miss_writers}
-        bids = list(writers)
-        blocks = jnp.stack([self._cache_block_kv(cache, ri, c)
-                            for ri, c in writers.values()])
-        self.prefix_engine.write_kv(bids, blocks)
-        self._pool_wver[bids] = -1 if wver is None else int(wver)
+        if act:
+            self.prefix_stats["paged_mid_batch_admissions"] += len(joiners)
+        # the joiners' pages are promised: a relocation triggered by this
+        # very plan's evictions may not starve their allocation
+        self._admit_reserved = sum(self._pages_needed(j) for j in joiners)
+        plan = self._lease_prefix_wave(rep, [j.prompt for j in joiners])
+        # weight lease first: reuse only KV computed under the SAME weight
+        # version this admission's prefill will use
+        params = rep.params()
+        wver = rep.reader.cached_version("params")
+        mat_cache: Dict[Tuple[int, ...], Tuple] = {}
+        for ji, req in enumerate(joiners):
+            self._admit_reserved -= self._pages_needed(req)
+            s = self._admit_one(rep, req, plan, ji, params, wver, mat_cache,
+                                tick)
+            if s is not None:
+                act.append(s)
+        self._admit_reserved = 0
+
+    def _admit_one(self, rep: DecodeReplica, req: Request, plan: WavePlan,
+                   ji: int, params, wver, mat_cache: Dict,
+                   tick: int) -> Optional[Stream]:
+        eng = self.prefix_engine
+        ps = self.prefix_stats
+        bt = self.prefix_block_tokens
+        bids = plan.groups[ji]
+        plen = len(req.prompt)
+        # re-check coverage against wver and current validity: a same-wave
+        # collision eviction or a cross-version slot truncates the reuse
+        n_ok = 0
+        for bid in bids[:plan.covered[ji]]:
+            if self._pool_wver[bid] != wver or not eng.kv_ok(bid):
+                break
+            n_ok += 1
+        stale = [b for b in bids[n_ok:plan.covered[ji]]
+                 if self._pool_wver[b] != wver and eng.kv_ok(b)]
+        if stale:
+            # cross-version KV must never mix into one forward pass: free
+            # the slots; this admission recomputes those positions, so
+            # repair them right away
+            eng.invalidate_kv(stale)
+            for b in stale:
+                plan.repair_writers.setdefault(
+                    b, (ji, bids.index(b)))
+        covered, skip = n_ok, n_ok * bt
+        cache_len = max(bt, -(-plen // bt) * bt)
+        # suffix right-padded to the block bucket (cache_len - skip); the
+        # real last position rides in as a traced index, so one trace
+        # serves every suffix length in the bucket
+        suffix = req.prompt[skip:]
+        toks = jnp.asarray(np.pad(suffix,
+                                  (0, cache_len - skip - len(suffix)))[None])
+        last = jnp.int32(len(suffix) - 1)
+        if skip:
+            key = tuple(bids[:covered])
+            if key not in mat_cache:
+                mat_cache[key] = self._pool_to_layer_kv(
+                    eng.read_kv(list(key)))
+            kp, vp = mat_cache[key]
+            cache, logits = self._psuffix_fn(params, {"tokens": toks},
+                                             kp, vp, skip, cache_len, last)
+            ps["prefix_prefill_tokens_skipped"] += skip
+            ps["prefix_flops_saved"] += skip * self._flops_per_token
+        else:
+            cache, logits = self._prefill_fn(params, {"tokens": toks},
+                                             cache_len, last)
+        # payload write-back: the blocks this request owns per the plan
+        wb = [(bid, c) for bid, (ri, c) in plan.miss_writers.items()
+              if ri == ji]
+        wb += [(bid, c) for bid, (ri, c) in plan.repair_writers.items()
+               if ri == ji and bid not in plan.miss_writers]
+        if wb:
+            blocks = jnp.stack([self._cache_block_kv(cache, 0, c)
+                                for _, c in wb])
+            eng.write_kv([bid for bid, _ in wb], blocks)
+            self._pool_wver[[bid for bid, _ in wb]] = \
+                -1 if wver is None else int(wver)
+        # page table: covered shared blocks (pinned + leased for the whole
+        # decode) then privately allocated pages for suffix + decode KV
+        total_pages = -(-(plen + req.max_new) // bt)
+        own = [int(b) for b in eng.alloc_pages(total_pages - covered)]
+        page_row = np.zeros(self.max_pages, np.int32)
+        page_row[:covered] = bids[:covered]
+        page_row[covered:total_pages] = own
+        for bid in bids[:covered]:
+            self._pins[bid] = self._pins.get(bid, 0) + 1
+        if own:
+            self._pool_wver[own] = -1 if wver is None else int(wver)
+        # the prompt's suffix KV lands in the own pages, token-granular
+        rows = self._cache_token_rows(cache, skip, plen)
+        pos = np.arange(skip, plen)
+        flat_idx = (page_row[pos // bt].astype(np.int64) * bt + pos % bt)
+        eng.append_kv(flat_idx, rows)
+        t0 = int(np.argmax(np.asarray(logits[0, -1])))
+        stream = Stream(req=req, page_row=page_row, own_pages=own,
+                        shared_bids=list(bids[:covered]), reloc_pages=[],
+                        length=plen, emitted=[t0])
+        in_use = self.n_decode_pages - eng.free_page_count()
+        ps["pool_page_peak"] = max(ps["pool_page_peak"], in_use)
+        if self.trace is not None:
+            self.trace.append({
+                "ev": "admit", "tick": tick, "rep": rep.name,
+                "rid": req.rid, "prompt_len": plen, "skip": skip,
+                "page_row": page_row.copy(), "pages": total_pages,
+                "logits": np.asarray(logits).copy(),
+                "rows": np.asarray(eng.kv_rows_view()).copy()})
+        if stream.finished:
+            self._finalize(stream)
+            return None
+        return stream
+
+    def _finalize(self, s: Stream) -> None:
+        """A finished request releases everything immediately: pins drop,
+        relocated copies refcount down, private pages go back on the free
+        list -- zero coherence messages."""
+        eng = self.prefix_engine
+        for bid in s.shared_bids:
+            n = self._pins.get(bid, 0) - 1
+            if n > 0:
+                self._pins[bid] = n
+            else:
+                self._pins.pop(bid, None)
+        for pg in s.reloc_pages:
+            n = self._reloc_refs.get(pg, 0) - 1
+            if n > 0:
+                self._reloc_refs[pg] = n
+            else:
+                self._reloc_refs.pop(pg, None)
+                eng.free_pages([pg])
+        if s.own_pages:
+            eng.free_pages(s.own_pages)
+        s.req.output = np.asarray(s.emitted[:s.req.max_new], np.int32)
+        s.req.done = True
+
+    def _renew_decode_leases(self, rep: DecodeReplica,
+                             act: List[Stream]) -> None:
+        """Decode-time re-reads of shared prefix blocks: every tick each
+        stream reads its pinned blocks; expired leases renew data-less in
+        ONE batched dispatch (the renewal-dominated pattern lease tuning
+        optimizes).  Unexpired leases are local hits -- no messages."""
+        expired: Dict[int, int] = {}
+        for s in act:
+            for bid in s.shared_bids:
+                ent = rep.kv_leases.get(bid)
+                if ent is None or ent[2] != self._tags[bid]:
+                    continue          # relocated/re-tagged: private copy
+                if rep.kv_pts <= ent[1]:
+                    # unexpired lease: a Table II local hit, zero messages
+                    self.prefix_stats["prefix_local_hits"] += 1
+                    self.prefix_stats["decode_local_hits"] += 1
+                    rep.kv_pts = max(rep.kv_pts, ent[0])   # Table I load
+                elif bid not in expired:
+                    expired[bid] = ent[0]
+        if not expired:
+            return
+        res = self.prefix_engine.read_many([list(expired)], rep.kv_pts,
+                                           req_wts=expired)
+        rep.kv_pts = int(res.new_pts.max())
+        for i, bid in enumerate(res.union_idx):
+            bid = int(bid)
+            rep.kv_leases[bid] = (int(res.wts[i]), int(res.rts[i]),
+                                  int(self._tags[bid]))
+        self.prefix_stats["decode_renewals"] += len(expired)
+
+    def _decode_tick(self, rep: DecodeReplica, act: List[Stream],
+                     tick: int) -> None:
+        """One continuous-batch decode step: every active stream advances a
+        token, all KV traffic through pool pages."""
+        eng = self.prefix_engine
+        rep.kv_pts += 1                   # the tick is one logical step
+        self._renew_decode_leases(rep, act)
+        bt = self.prefix_block_tokens
+        page_rows = np.stack([s.page_row for s in act])
+        lengths = np.asarray([s.length for s in act], np.int32)
+        tokens = np.asarray([[s.emitted[-1]] for s in act], np.int32)
+        params = rep.params()             # weight lease check per tick
+        with warnings.catch_warnings():
+            # CPU XLA can't honor the pool donation; the TPU path does
+            warnings.filterwarnings("ignore", message=".*donat.*")
+            pool, logits = self._decode_paged_fn(
+                params, eng.kv_rows_view(), jnp.asarray(page_rows),
+                jnp.asarray(lengths), jnp.asarray(tokens))
+        eng.set_kv_rows(pool, tokens_appended=len(act))
+        self.prefix_stats["decode_block_reads"] += int(
+            sum(-(-(int(l) + 1) // bt) for l in lengths))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        if self.trace is not None:
+            self.trace.append({
+                "ev": "tick", "tick": tick, "rep": rep.name,
+                "rids": [s.req.rid for s in act],
+                "lengths": lengths.copy(), "tokens": tokens.copy(),
+                "logits": np.asarray(logits).copy()})
+        done = []
+        for s, t in zip(act, nxt):
+            s.length += 1
+            s.emitted.append(int(t))
+            if s.finished:
+                done.append(s)
+        for s in done:
+            self._finalize(s)
+            act.remove(s)
+
+    def _run_paged(self, requests: List[Request]) -> None:
+        """The continuous-batching scheduler: requests join the running
+        batch as pages free up, finish independently, and release pages
+        immediately.  Arrival order groups of ``n_replicas`` requests are
+        affined to replicas round-robin (the old wave layout), but
+        admission and completion are fully independent per stream."""
+        nr = len(self.replicas)
+        queues = [deque() for _ in range(nr)]
+        for k in range(0, len(requests), nr):
+            queues[(k // nr) % nr].extend(requests[k:k + nr])
+        tick = 0
+        while any(queues) or any(self._active):
+            for r, rep in enumerate(self.replicas):
+                self._admit(r, rep, queues[r], self._active[r], tick)
+            for r, rep in enumerate(self.replicas):
+                if self._active[r]:
+                    self._decode_tick(rep, self._active[r], tick)
+            self._maybe_rebase()
+            tick += 1
 
     # -- request loop -------------------------------------------------------
 
     def _serve_wave(self, rep: DecodeReplica, wave: List[Request],
                     plan: Optional[WavePlan]) -> None:
-        # read the weight lease first: the pool may only serve KV computed
-        # under the SAME weight version this wave's prefill will use
-        params = rep.params()
-        wver = rep.reader.cached_version("params")
-        skip, prefix_kv = 0, None
-        if (plan is not None and plan.skip_tokens
-                and self.prefix_engine.has_kv):
-            n_ok = 0
-            for bid in plan.skip_bids:
-                # re-check validity too: a same-wave collision eviction may
-                # have freed a slot after the plan's covered walk ran
-                if (self._pool_wver[bid] != wver
-                        or not self.prefix_engine.kv_ok(bid)):
-                    break
-                n_ok += 1
-            stale = plan.skip_bids[n_ok:]
-            if stale:
-                # cross-version KV must never mix into one forward pass:
-                # free the slots; this wave recomputes those positions
-                # (they're beyond its skip), so repair them right away
-                self.prefix_engine.invalidate_kv(stale)
-                for j, bid in enumerate(stale):
-                    plan.repair_writers.setdefault(bid, (0, n_ok + j))
-            skip = n_ok * self.prefix_block_tokens
-            if 0 < skip < min(len(r.prompt) for r in wave):
-                pooled = self.prefix_engine.read_kv(plan.skip_bids[:n_ok])
-                prefix_kv = self._pool_to_layer_kv(pooled)
-                self.prefix_stats["prefix_prefill_tokens_skipped"] += (
-                    skip * len(wave))
-                self.prefix_stats["prefix_flops_saved"] += (
-                    skip * len(wave) * self._flops_per_token)
-            else:
-                skip = 0
-        rep.serve(wave, prefix_kv=prefix_kv, skip=skip, params=params)
-        if (plan is not None and self.prefix_engine.has_kv
-                and (plan.miss_writers or plan.repair_writers)):
-            self._writeback_prefix(rep, plan, wver)
-        rep.last_prefill_cache = None    # only needed until the write-back
+        """Dense-cache fallback wave (moe/ssm/hybrid): the lease protocol
+        still runs per wave (prefix metadata sharing), decode stays on the
+        per-request dense caches.  Everything serve needs from the plan
+        (per-request coverage, clamped in the plan itself) already lives in
+        ``WavePlan`` -- serve recomputes nothing."""
+        del plan
+        rep.serve(wave, params=rep.params())
 
     def run(self, requests: List[Request]) -> Tuple[List[Request], Dict]:
+        if self.paged:
+            self._run_paged(requests)
+            return requests, self.coherence_report()
         waves: List[List[Request]] = []
         for i, r in enumerate(requests):
             if i % len(self.replicas) == 0:
@@ -506,4 +805,9 @@ class ServingCluster:
             "prefix_kv_blocks_written": e.kv_blocks_written,
             "prefix_kv_blocks_read": e.kv_blocks_read,
             "prefix_kv_evictions": e.kv_evictions,
+            # decode-through-pages ledger (pool occupancy / page churn)
+            "kv_tokens_appended": e.kv_tokens_appended,
+            "pool_pages_allocated": e.pages_allocated,
+            "pool_pages_freed": e.pages_freed,
+            "pool_pages_free": self.prefix_engine.free_page_count(),
         }

@@ -4,17 +4,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention)
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
-from repro.kernels.tardis_lease.ops import (lease_check, masked_lease_check,
+from repro.kernels.tardis_lease.ops import (append_rows, lease_check,
+                                            masked_lease_check,
                                             write_advance)
-from repro.kernels.tardis_lease.ref import (lease_check_ref,
+from repro.kernels.tardis_lease.ref import (append_rows_ref, lease_check_ref,
                                             masked_lease_check_ref,
                                             write_advance_ref)
 
@@ -120,6 +123,74 @@ def test_tardis_masked_ops(n, pts):
     np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
     np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
     assert int(t1) == int(t2)
+
+
+@pytest.mark.parametrize("b,h,hk,d,chunk,nb,p", [
+    (3, 6, 2, 16, 4, 8, 3),
+    (2, 4, 4, 32, 8, 16, 4),     # MHA-style, bigger pages
+    (1, 8, 1, 16, 16, 4, 2),     # MQA
+])
+@pytest.mark.parametrize("layers,layer", [(2, 0), (2, 1), (1, 0)])
+def test_paged_decode_attention_kernel(b, h, hk, d, chunk, nb, p, layers,
+                                       layer):
+    """Paged flash-decode (page tables drive the K/V DMA) vs the
+    gather-then-reference oracle, across ragged per-request lengths."""
+    rng = np.random.default_rng(b * 100 + h)
+    te = 2 * layers * hk * d
+    token_row = -(-te // 128) * 128
+    pool = jnp.asarray(rng.standard_normal((nb * chunk, token_row)),
+                       jnp.float32)
+    page_rows = jnp.asarray(rng.integers(0, nb, (b, p)), jnp.int32)
+    lengths = jnp.asarray(rng.integers(0, p * chunk, b), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+    ck = jnp.asarray(rng.standard_normal((b, 1, hk, d)), jnp.float32)
+    cv = jnp.asarray(rng.standard_normal((b, 1, hk, d)), jnp.float32)
+    k_off, v_off = layer * hk * d, (layers + layer) * hk * d
+    out = paged_decode_attention(q, ck, cv, pool, page_rows, lengths,
+                                 chunk=chunk, k_off=k_off, v_off=v_off,
+                                 hkv=hk, interpret=True)
+    ref = paged_decode_attention_ref(q, ck, cv, pool, page_rows, lengths,
+                                     chunk=chunk, k_off=k_off, v_off=v_off,
+                                     hkv=hk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,w,rows_w", [(8, 256, 256), (16, 512, 300)])
+def test_append_rows_scatter_kernel(n, w, rows_w):
+    """The token-append scatter: written rows land at their ids, every
+    other row keeps its bits (in/out aliasing), last write wins."""
+    rng = np.random.default_rng(n)
+    pool = jnp.asarray(rng.standard_normal((n, w)), jnp.float32)
+    idx = jnp.asarray([2, 0, n - 1, 2], jnp.int32)       # duplicate id
+    rows = jnp.asarray(rng.standard_normal((4, rows_w)), jnp.float32)
+    ref = np.asarray(append_rows_ref(pool, idx, rows))
+    out = append_rows(pool, idx, rows, interpret=True)   # donates pool
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_decode_attention_routing():
+    """models.attention.decode_attention routes eligible GQA shapes through
+    the Pallas flash-decode kernel (interpret fallback off-TPU) and keeps
+    the dense einsum as the reference for everything else."""
+    from repro.models import attention as A
+    rng = np.random.default_rng(0)
+    b, h, hk, d, t = 1, 4, 2, 64, 2048
+    q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, t, hk, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, t, hk, d)), jnp.float32)
+    on_tpu = jax.default_backend() == "tpu"
+    # the auto-route fires only where the kernel compiles (TPU)
+    assert A._kernel_eligible(q, kc, jnp.int32(100),
+                              A.DECODE_KERNEL_MIN_T) == on_tpu
+    # small caches stay on the einsum; vector kv_len is the paged path's
+    assert not A._kernel_eligible(q, kc[:, :512], jnp.int32(9), 2048)
+    assert not A._kernel_eligible(q, kc, jnp.asarray([100]), 2048)
+    # forcing the route off-TPU takes the interpret fallback
+    routed = A.decode_attention(q, kc, vc, jnp.int32(100), use_kernel=True)
+    ref = A.decode_attention(q, kc, vc, jnp.int32(100), use_kernel=False)
+    np.testing.assert_allclose(np.asarray(routed), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
 
 
 def test_lease_kernel_matches_simulator_rules():

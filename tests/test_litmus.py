@@ -164,8 +164,16 @@ def interleavings(progs):
     yield from rec(counts, [])
 
 
-def run_litmus(progs, schedule, make_mgr):
-    """One execution; returns (regs, loads, stores, final_state, pts)."""
+def run_litmus(progs, schedule, make_mgr, decode_reads=0):
+    """One execution; returns (regs, loads, stores, final_state, pts).
+
+    ``decode_reads > 0`` injects the serving engine's decode-time access
+    pattern into the history: after each program op, the core re-reads
+    every address it holds that many times (local hits while the lease
+    covers pts, renewals after), exactly like a continuous-batch decode
+    tick re-reading its leased prefix blocks.  The re-read loads join the
+    per-load timestamp-invariant check.
+    """
     mgr = make_mgr()
     versions = {a: {0: 0} for a in range(N_ADDR)}
     cores = [Core(mgr, versions) for _ in progs]
@@ -183,14 +191,20 @@ def run_litmus(progs, schedule, make_mgr):
             val, version = core.load(op[1])
             regs[op[2]] = val
             loads.append((op[1], version, core.pts))
+        for addr in sorted(core.cache):        # decode-tick block re-reads
+            for _ in range(decode_reads):
+                core.pts += 1                  # each tick is a logical step
+                _, version = core.load(addr)
+                loads.append((addr, version, core.pts))
         assert core.pts >= pts_before          # timestamp order embeds
         #                                        program order per core
     return regs, loads, stores, mgr.state(), [c.pts for c in cores]
 
 
 @pytest.mark.parametrize("shape", sorted(LITMUS))
-@pytest.mark.parametrize("lease", [1, 4])
-def test_litmus_forbidden_outcomes_never_observed(shape, lease):
+@pytest.mark.parametrize("lease,decode_reads", [(1, 0), (4, 0), (4, 2)])
+def test_litmus_forbidden_outcomes_never_observed(shape, lease,
+                                                  decode_reads):
     progs, forbidden = LITMUS[shape]
     backends = {
         "kernel": lambda: EngineManager("pallas", lease),
@@ -198,7 +212,7 @@ def test_litmus_forbidden_outcomes_never_observed(shape, lease):
         "scalar": lambda: ScalarManager(lease),
     }
     for schedule in interleavings(progs):
-        results = {name: run_litmus(progs, schedule, mk)
+        results = {name: run_litmus(progs, schedule, mk, decode_reads)
                    for name, mk in backends.items()}
         regs, loads, stores, state, pts = results["kernel"]
         # the three implementations of Tables I-III agree bit-for-bit
