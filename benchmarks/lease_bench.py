@@ -17,9 +17,24 @@ On TPU the pallas backend runs the compiled kernels; on CPU it runs in
 interpret mode, so the numpy mirror wins there -- the point of the bench is
 to *record* the ratio per platform (EXPERIMENTS.md), not to assert it.
 
+The decode bench times TWO rows: the dense family and a moe family whose
+DUAL cache stacks page through the engine's named pools (interleaved token
+rows) -- the paged-vs-dense ratio is tracked per row.
+
+``--check-against BENCH_lease.json`` is the CI **bench-regression gate**:
+it re-measures the baseline's gated shapes (best of ``--check-repeats``
+passes, min-over-iterations estimator) and exits 1 if any tracked
+dimensionless ratio -- wave batched-vs-sequential speedup, kernel-vs-
+mirror throughput ratio, paged-over-dense decode ratio -- regresses past
+its tolerance vs the checked-in baseline (25%; the decode rows gate at 2x
+-- see ``DECODE_TOLERANCE``).  Absolute microseconds are never gated (CI
+runners drift); ratios compare the machine against itself.
+
 Run:  PYTHONPATH=src python benchmarks/lease_bench.py [--sizes 4096,65536]
                                                       [--json BENCH_lease.json]
       PYTHONPATH=src python benchmarks/lease_bench.py --smoke   # CI lane
+      PYTHONPATH=src python benchmarks/lease_bench.py --smoke \
+          --check-against BENCH_lease.json          # CI regression gate
 """
 import argparse
 import json
@@ -41,17 +56,24 @@ def bench_engine(n_blocks: int, backend: str, iters: int):
     req = eng.wts[idx]
     pts = 0
 
+    # min over per-op timings: the mean drags scheduler/GC noise into the
+    # kernel-vs-mirror ratio the CI gate tracks; the min estimates the
+    # cost floor and is stable across runs and process histories
     pts = eng.read(idx, pts, req_wts=req).new_pts      # warm up / compile
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         pts = eng.read(idx, pts, req_wts=req).new_pts
-    dt_read = (time.perf_counter() - t0) / iters
+        times.append(time.perf_counter() - t0)
+    dt_read = min(times)
 
     pts = eng.write(idx, pts)
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         pts = eng.write(idx, pts)
-    dt_write = (time.perf_counter() - t0) / iters
+        times.append(time.perf_counter() - t0)
+    dt_write = min(times)
 
     blocks = len(idx)
     row(f"lease_check/{backend}/n{n_blocks}", dt_read * 1e6,
@@ -83,17 +105,21 @@ def bench_wave(n_blocks: int, backend: str, iters: int, wave: int,
     for g in groups:
         eng_s.read(g, 0, req_wts=req_seq)
 
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         pts = int(eng_b.read_many(groups, pts, req_wts=req).new_pts.max())
-    dt_wave = (time.perf_counter() - t0) / iters
+        times.append(time.perf_counter() - t0)
+    dt_wave = min(times)       # min over iterations, like bench_engine
 
     pts = 0
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         for g in groups:
             pts = eng_s.read(g, pts, req_wts=req_seq).new_pts
-    dt_seq = (time.perf_counter() - t0) / iters
+        times.append(time.perf_counter() - t0)
+    dt_seq = min(times)
 
     row(f"wave_read_many/{backend}/n{n_blocks}/B{wave}", dt_wave * 1e6,
         f"1 dispatch, {dt_seq / dt_wave:.2f}x vs per-request")
@@ -107,9 +133,11 @@ def bench_wave(n_blocks: int, backend: str, iters: int, wave: int,
 
 def bench_decode(iters: int, steps: int, batch: int = 4,
                  prompt: int = 64, cache_len: int = 256,
-                 page_tokens: int = 16):
+                 page_tokens: int = 16, arch: str = "tinyllama-1.1b"):
     """Paged decode (pool pages + append kernel) vs dense-cache decode:
-    ``steps`` continuous-batch decode steps each, same reduced model."""
+    ``steps`` continuous-batch decode steps each, same reduced model.
+    ``arch`` picks the family -- the moe row pages BOTH cache stacks
+    through the engine's named pools (interleaved token rows)."""
     import warnings
 
     import jax
@@ -117,12 +145,15 @@ def bench_decode(iters: int, steps: int, batch: int = 4,
 
     from repro.configs import get_arch, reduced
     from repro.core import LeaseEngine
-    from repro.models import (decode_step, decode_step_paged, init_cache,
-                              init_params, prefill)
+    from repro.models import (decode_step, decode_step_paged, init_params,
+                              pool_layout, prefill)
 
     from benchmarks.common import row
 
-    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=2, d_model=64,
+    # d256 keeps the step compute-dominated: at d64 the ~1ms step is mostly
+    # Python/XLA dispatch, whose cost drifts with process history and makes
+    # the gated paged/dense ratio swing ~2x between runs
+    cfg = reduced(get_arch(arch), n_layers=2, d_model=256, d_ff=512,
                   vocab=256)
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     rng = np.random.default_rng(0)
@@ -143,17 +174,23 @@ def bench_decode(iters: int, steps: int, batch: int = 4,
             cur = cur + 1
         jax.block_until_ready(lg)
 
+    # the gate tracks paged/dense: use the MIN over iterations (each one
+    # a full `steps`-step run) -- the mean drags scheduler noise into the
+    # ratio, the min estimates the cost floor and is stable run to run
     run_dense()                                        # compile
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         run_dense()
-    dt_dense = (time.perf_counter() - t0) / (iters * steps)
+        times.append(time.perf_counter() - t0)
+    dt_dense = min(times) / steps
 
-    # paged: same shapes through LeaseEngine pool pages
+    # paged: same shapes through LeaseEngine pool pages -- one named pool
+    # per cache stack (moe: dense + moe interleaved in each token row)
     hk, dh = cfg.n_kv_heads, cfg.head_dim()
     eng = LeaseEngine(batch * (cache_len // page_tokens) + 8,
-                      kv_block_shape=(page_tokens, 2,
-                                      cfg.n_layers * hk, dh))
+                      kv_pools={s.pool: (page_tokens, 2, s.n_layers * hk, dh)
+                                for s in pool_layout(cfg)})
     pages_per = cache_len // page_tokens
     page_rows = np.stack([np.asarray(eng.alloc_pages(pages_per), np.int32)
                           for _ in range(batch)])
@@ -176,49 +213,53 @@ def bench_decode(iters: int, steps: int, batch: int = 4,
         jax.block_until_ready(lg)
 
     run_paged()                                        # compile
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         run_paged()
-    dt_paged = (time.perf_counter() - t0) / (iters * steps)
+        times.append(time.perf_counter() - t0)
+    dt_paged = min(times) / steps
 
-    row(f"decode_dense/B{batch}/T{cache_len}", dt_dense * 1e6,
+    fam = cfg.family
+    row(f"decode_dense/{fam}/B{batch}/T{cache_len}", dt_dense * 1e6,
         f"{batch / dt_dense:.3e} tok/s")
-    row(f"decode_paged/B{batch}/T{cache_len}", dt_paged * 1e6,
+    row(f"decode_paged/{fam}/B{batch}/T{cache_len}", dt_paged * 1e6,
         f"{batch / dt_paged:.3e} tok/s, "
         f"{dt_paged / dt_dense:.2f}x vs dense")
-    return {"batch": batch, "cache_len": cache_len, "steps": steps,
+    return {"arch": arch, "family": fam, "batch": batch,
+            "cache_len": cache_len, "steps": steps,
             "dense_us_per_step": dt_dense * 1e6,
             "paged_us_per_step": dt_paged * 1e6,
             "paged_over_dense": dt_paged / dt_dense}
 
 
-def main():
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+# decode rows: JSON key -> the arch whose reduced config is timed ("B4/..."
+# keeps its historical dense key; the moe row pages dual cache stacks)
+DECODE_ROWS = {
+    "B4/T256": "tinyllama-1.1b",
+    "moe/B4/T256": "kimi-k2-1t-a32b",
+}
+
+# the CI regression gate's tolerance: a tracked ratio may not regress more
+# than 25% vs the checked-in baseline.  The decode rows get a looser bound:
+# on CPU the paged/dense step ratio carries irreducible process-history
+# noise (measured spread ~1.6-2.9x across otherwise identical runs even
+# with the min estimator), so they gate at 2x -- still far below what any
+# real paged-path rot (a per-token full-table gather, a lost kernel route)
+# produces, without permanent flakes.
+CHECK_TOLERANCE = 1.25
+DECODE_TOLERANCE = 2.0
+
+
+def run_suite(args, sizes, decode_rows):
+    """One full measurement pass; returns the machine-readable dict."""
     import jax
 
     from benchmarks.common import header
 
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--sizes", default="4096,16384,65536")
-    ap.add_argument("--iters", type=int, default=20)
-    ap.add_argument("--wave", type=int, default=8,
-                    help="requesters per wave for the batched-read bench")
-    ap.add_argument("--decode-steps", type=int, default=8,
-                    help="decode steps per timed run (paged-vs-dense)")
-    ap.add_argument("--json", default="BENCH_lease.json",
-                    help="machine-readable output path ('' to skip)")
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes/iters so CI exercises every bench "
-                         "path in seconds (writes no JSON)")
-    args = ap.parse_args()
-    if args.smoke:
-        args.sizes, args.iters, args.decode_steps = "1024", 2, 2
-        args.json = ""
-
     plat = jax.default_backend()
     header(f"LeaseEngine throughput (platform={plat}; pallas backend runs "
            f"{'compiled' if plat == 'tpu' else 'in interpret mode'})")
-    sizes = [int(s) for s in args.sizes.split(",")]
     out = {"platform": plat, "iters": args.iters,
            "engine": {}, "wave": {}, "decode": {}}
     for n in sizes:
@@ -231,9 +272,15 @@ def main():
         for backend in ("pallas", "numpy"):
             out["wave"][f"{backend}/n{n}"] = bench_wave(
                 n, backend, args.iters, args.wave, blocks_per_req=8)
-    header("paged-vs-dense decode (continuous-batch step, reduced model)")
-    out["decode"]["B4/T256"] = bench_decode(max(2, args.iters // 4),
-                                            args.decode_steps)
+    header("paged-vs-dense decode (continuous-batch step, reduced model; "
+           "moe row pages dual cache stacks through named pools)")
+    for key, arch in decode_rows.items():
+        # the decode rows feed the gate's tracked ratio: a 2-iteration
+        # timing swings ~2x run to run on CPU, so floor the repetitions
+        # high enough that the ratio is a property of the code, not of
+        # the scheduler's mood
+        out["decode"][key] = bench_decode(max(6, args.iters // 2),
+                                          args.decode_steps, arch=arch)
     for n in sizes:
         k = out["engine"][f"pallas/n{n}"]
         m = out["engine"][f"numpy/n{n}"]
@@ -244,14 +291,185 @@ def main():
               f"wave speedup pallas "
               f"{out['wave'][f'pallas/n{n}']['speedup']:.2f}x / numpy "
               f"{out['wave'][f'numpy/n{n}']['speedup']:.2f}x")
-    d = out["decode"]["B4/T256"]
-    print(f"# paged decode {d['paged_us_per_step']:.0f} us/step vs dense "
-          f"{d['dense_us_per_step']:.0f} us/step "
-          f"({d['paged_over_dense']:.2f}x)")
+    for key, d in out["decode"].items():
+        print(f"# paged decode [{key}] {d['paged_us_per_step']:.0f} us/step "
+              f"vs dense {d['dense_us_per_step']:.0f} us/step "
+              f"({d['paged_over_dense']:.2f}x)")
+    return out
+
+
+def tracked_ratios(out):
+    """The gate's dimensionless ratios: key -> (value, higher_is_better,
+    tolerance).
+
+    Only ratios are gated -- absolute microseconds drift with the CI
+    runner's load, but batched-vs-sequential speedups, kernel-vs-mirror
+    throughput ratios, and the paged-over-dense step ratio measure the
+    same machine against itself.  Engine/wave ratios are tracked at the
+    LARGEST measured table only: the small-table variants run in
+    microseconds where scheduler jitter dominates any real regression.
+    Decode rows carry :data:`DECODE_TOLERANCE` (see its comment).
+    """
+    r = {}
+    sizes = sorted({int(k.split("/n")[1]) for k in out.get("engine", {})}
+                   | {int(k.split("/n")[1]) for k in out.get("wave", {})})
+    if sizes:
+        n = sizes[-1]
+        for backend in ("pallas", "numpy"):
+            w = out.get("wave", {}).get(f"{backend}/n{n}")
+            if w:
+                r[f"wave_speedup/{backend}/n{n}"] = (
+                    w["speedup"], True, CHECK_TOLERANCE)
+        p = out.get("engine", {}).get(f"pallas/n{n}")
+        m = out.get("engine", {}).get(f"numpy/n{n}")
+        if p and m:
+            r[f"engine_read_ratio/n{n}"] = (
+                p["read_blocks_per_s"] / m["read_blocks_per_s"], True,
+                CHECK_TOLERANCE)
+            r[f"engine_write_ratio/n{n}"] = (
+                p["write_blocks_per_s"] / m["write_blocks_per_s"], True,
+                CHECK_TOLERANCE)
+    for k, d in out.get("decode", {}).items():
+        r[f"decode_paged_over_dense/{k}"] = (
+            d["paged_over_dense"], False, DECODE_TOLERANCE)
+    return r
+
+
+def check_against(baseline, runs):
+    """Compare the best of ``runs`` against the baseline's tracked ratios.
+
+    Returns ``(regressions, best)``: the regressions (worse than the
+    baseline by more than the key's tolerance, or a baseline key the
+    current run did not measure at all -- a silently-dropped row must fail
+    the gate, not sail through green) and the folded best-of-runs ratio
+    per key (reused verbatim for the artifact's ``gate`` block so the
+    JSON reconstructs this verdict).
+    """
+    base = tracked_ratios(baseline)
+    best = {}
+    for out in runs:
+        for k, (v, hib, tol) in tracked_ratios(out).items():
+            if k not in best:
+                best[k] = (v, hib)
+            else:
+                best[k] = (max(best[k][0], v) if hib
+                           else min(best[k][0], v), hib)
+    regressions = []
+    for k, (bv, hib, tol) in sorted(base.items()):
+        if k not in best:
+            print(f"# bench gate: {k:44s} baseline {bv:8.3f} current "
+                  f" missing [REGRESSION]")
+            regressions.append((k, bv, None))
+            continue
+        cv = best[k][0]
+        bad = cv < bv / tol if hib else cv > bv * tol
+        mark = "REGRESSION" if bad else "ok"
+        print(f"# bench gate: {k:44s} baseline {bv:8.3f} current {cv:8.3f} "
+              f"[{mark}, tol {tol:.2f}x]")
+        if bad:
+            regressions.append((k, bv, cv))
+    return regressions, {k: v for k, (v, _h) in best.items()}
+
+
+def main():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="4096,16384,65536")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--wave", type=int, default=8,
+                    help="requesters per wave for the batched-read bench")
+    ap.add_argument("--decode-steps", type=int, default=8,
+                    help="decode steps per timed run (paged-vs-dense)")
+    ap.add_argument("--json", default=None,
+                    help="machine-readable output path ('' to skip); "
+                         "defaults to BENCH_lease.json, or bench_ci.json "
+                         "under --check-against so a gate run can never "
+                         "clobber a checked-in baseline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes/iters so CI exercises every bench "
+                         "path in seconds (writes no JSON unless checking)")
+    ap.add_argument("--check-against", default="",
+                    help="baseline JSON: fail (exit 1) if any tracked "
+                         "ratio regresses past its tolerance vs it (25%%; "
+                         "decode rows 2x -- see DECODE_TOLERANCE).  Runs "
+                         "the BASELINE's gated shapes (best of "
+                         "--check-repeats passes) so keys line up")
+    ap.add_argument("--check-repeats", type=int, default=3,
+                    help="measurement passes for the gate (best-of, to "
+                         "shave CI runner noise)")
+    args = ap.parse_args()
+    if args.json is None:
+        args.json = "bench_ci.json" if args.check_against \
+            else "BENCH_lease.json"
+    if args.smoke and not args.check_against:
+        args.sizes, args.iters, args.decode_steps = "1024", 2, 2
+        args.json = ""
+
+    baseline = None
+    decode_rows = dict(DECODE_ROWS)
+    if args.check_against:
+        with open(args.check_against) as f:
+            baseline = json.load(f)
+        # measure exactly the baseline's gated shapes AND iteration regime
+        # so every key lines up and the timing amortization matches (a
+        # 2-iter smoke against a 10-iter baseline flags pure noise); only
+        # the largest table is gated, so only it is re-measured
+        bsizes = sorted({int(k.split("/n")[1]) for k in baseline["engine"]})
+        args.sizes = str(bsizes[-1])
+        args.iters = int(baseline.get("iters", args.iters))
+        decode_rows = {k: DECODE_ROWS[k] for k in baseline.get("decode", {})
+                       if k in DECODE_ROWS}
+        if os.path.abspath(args.json or "") \
+                == os.path.abspath(args.check_against):
+            args.json = "bench_ci.json"   # never clobber the baseline
+        plat = jax.default_backend()
+        if baseline.get("platform") != plat:
+            print(f"# bench gate: baseline platform "
+                  f"{baseline.get('platform')} != {plat}; ratios are not "
+                  f"comparable, skipping the gate")
+            baseline = None
+
+    sizes = [int(s) for s in args.sizes.split(",")]
+    repeats = args.check_repeats if baseline else 1
+    runs = [run_suite(args, sizes, decode_rows) for _ in range(repeats)]
+    regressions = best = None
+    if baseline:
+        regressions, best = check_against(baseline, runs)
     if args.json:
+        out = dict(runs[0])
+        if baseline:
+            # the artifact must reconstruct the VERDICT, which is computed
+            # from the best-of-repeats ratios, not from run 0's raw times
+            out["gate"] = {
+                "baseline": args.check_against,
+                "repeats": repeats,
+                # per-key tolerances: decode rows gate looser than the
+                # engine/wave ratios, and the artifact must reconstruct
+                # the verdict exactly
+                "tolerances": {k: t for k, (_v, _h, t)
+                               in tracked_ratios(baseline).items()},
+                "baseline_ratios": {k: v for k, (v, _h, _t)
+                                    in tracked_ratios(baseline).items()},
+                "best_ratios": best,
+                "per_run_ratios": [
+                    {k: v for k, (v, _h, _t) in tracked_ratios(run).items()}
+                    for run in runs],
+                "regressions": [list(r) for r in regressions],
+            }
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)
         print(f"# wrote {args.json}")
+    if baseline:
+        if regressions:
+            for k, bv, cv in regressions:
+                cur = "unmeasured" if cv is None else f"{cv:.3f}"
+                print(f"# bench gate FAILED: {k} regressed "
+                      f"{bv:.3f} -> {cur} (past tolerance, or dropped)")
+            sys.exit(1)
+        print("# bench gate: all tracked ratios within tolerance of "
+              "baseline")
 
 
 if __name__ == "__main__":

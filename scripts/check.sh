@@ -40,6 +40,13 @@ EOF
 python examples/serve_tardis.py --replicas 2 --requests 16 --max-new 4 \
     --layers 2 --d-model 64 --check
 
+# moe serving smoke: kimi-k2 scaled-down pages BOTH cache stacks through
+# the engine's named pools -- the per-stack occupancy counters must move
+python -m repro.launch.serve --arch kimi-k2-1t-a32b --replicas 2 \
+    --requests 6 --max-new 2 --max-batch 2 | tee /tmp/serve_moe_check.out
+grep -Eq "pool_tokens_appended_dense +[1-9]" /tmp/serve_moe_check.out
+grep -Eq "pool_tokens_appended_moe +[1-9]" /tmp/serve_moe_check.out
+
 # bench smoke: every lease_bench path (engine, wave, paged-vs-dense
 # decode) runs end to end so the bench code cannot rot.
 python benchmarks/lease_bench.py --smoke

@@ -32,18 +32,28 @@ flits for ``block_bytes``; a write publishes header + payload flits.
 Three extensions make leased blocks carry *real data*, make the wave the
 unit of dispatch, and make the pool the only KV substrate decode touches:
 
-  * **paged KV pool** -- when constructed with ``kv_block_shape`` (the
-    serving layout is ``(chunk, 2, kv_heads, head_dim)``) the engine owns a
+  * **paged KV pool(s)** -- when constructed with ``kv_block_shape`` (the
+    serving layout is ``(chunk, 2, kv_heads, head_dim)``) or with
+    ``kv_pools`` (an ordered mapping of NAMED pools, one per cache stack --
+    the MoE serving layout is ``{"dense": (chunk, 2, fd*kv_heads, hd),
+    "moe": (chunk, 2, nm*kv_heads, hd)}``) the engine owns a
     device-resident ``(n_blocks, row)`` payload pool alongside the
     ``(wts, rts)`` metadata; each row is ``chunk`` lane-padded TOKEN rows,
     so a single token is one aligned row of the ``(n_blocks*chunk,
-    token_row)`` flat view (``kv_rows_view``).  ``write_kv`` scatters block
-    payloads in, ``read_kv`` materializes them through the ``tardis_lease``
-    Pallas gather kernel (scalar-prefetched ids drive the DMA index map),
-    and a host-side validity bitmap tracks which slots hold content for the
-    *current* tag -- ``invalidate_kv`` frees a slot on collision eviction
-    with zero messages.  ``maybe_rebase`` shifts metadata only: pool
-    contents are timestamps-free and survive any rebase untouched.
+    token_row)`` flat view (``kv_rows_view``).  With multiple pools the
+    token row **interleaves** every stack's segment (each lane-padded, at a
+    static ``pool_offset``), so ONE block id leases every stack's payload
+    and every transition -- lease, write, eviction, relocation, rebase,
+    page alloc/free -- stays a single logical event covering all stacks.
+    ``write_kv`` scatters block payloads in (all stacks in one dispatch),
+    ``read_kv`` materializes them through the ``tardis_lease`` Pallas
+    gather kernel (scalar-prefetched ids drive the DMA index map; a
+    ``pool=`` argument gathers one stack's column window without touching
+    its neighbors), and a host-side validity bitmap tracks which slots hold
+    content for the *current* tag -- ``invalidate_kv`` frees a slot on
+    collision eviction with zero messages.  ``maybe_rebase`` shifts
+    metadata only: pool contents are timestamps-free and survive any
+    rebase untouched.
   * **per-wave batched ops** -- ``read_many`` resolves the reads/renewals
     of a whole wave of requesters in ONE ``masked_lease_check_many`` kernel
     dispatch (the multi-row mask path), and ``write_many`` folds a wave's
@@ -65,7 +75,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -113,6 +123,9 @@ class LeaseStats:
     kv_tokens_appended: int = 0  # single token rows appended into pages
     pages_allocated: int = 0     # free-list pops (decode page churn)
     pages_freed: int = 0         # free-list pushes
+    # per-stack occupancy: token rows appended into each named pool's
+    # segment (a full-row append feeds every stack at once)
+    kv_pool_tokens: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def wire_bytes(self) -> int:
@@ -160,6 +173,7 @@ class LeaseEngine:
                  backend: str = "pallas", ts_bits: int = 30,
                  block_bytes: int = 0, interpret: Optional[bool] = None,
                  kv_block_shape: Optional[Sequence[int]] = None,
+                 kv_pools: Optional[Mapping[str, Sequence[int]]] = None,
                  kv_dtype=jnp.bfloat16, alloc_reserve: int = 0):
         if backend not in ("pallas", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -185,20 +199,47 @@ class LeaseEngine:
         self.alloc_reserve = int(alloc_reserve)
         self._free_pages = list(range(self.n_blocks - 1,
                                       self.alloc_reserve - 1, -1))
-        # paged KV payload pool: one row per block = ``chunk`` lane-padded
+        # paged KV payload pool(s): one row per block = ``chunk`` lane-padded
         # TOKEN rows back to back, so a single decoded token's KV is one
         # aligned row in the (n_blocks*chunk, token_row) flat view (the
         # decode kernels' substrate) and a whole block is ``chunk``
-        # consecutive rows (the gather kernel's).  The validity bitmap is
+        # consecutive rows (the gather kernel's).  With MULTIPLE named
+        # pools (one per cache stack) each token row interleaves every
+        # stack's lane-padded segment at a static column offset -- one
+        # block id owns every stack's payload, one free list pages them,
+        # one lease transition covers them all.  The validity bitmap is
         # host metadata (whether a slot holds content for its current tag),
-        # NOT protocol state -- it carries no timestamps and never rebases.
-        self.kv_block_shape = (tuple(int(s) for s in kv_block_shape)
-                               if kv_block_shape else None)
-        if self.kv_block_shape:
-            self.kv_chunk = int(self.kv_block_shape[0])
-            self._kv_token_elems = int(np.prod(self.kv_block_shape[1:]))
+        # NOT protocol state -- it carries no timestamps and never rebases;
+        # it is per BLOCK, not per stack: a block's content is published
+        # for every stack at once (write_kv) or for none.
+        if kv_pools is not None and kv_block_shape is not None:
+            raise ValueError("pass kv_block_shape or kv_pools, not both")
+        if kv_pools is None and kv_block_shape is not None:
+            kv_pools = {"kv": kv_block_shape}
+        self.kv_pools: Optional[Dict[str, tuple]] = (
+            {str(k): tuple(int(s) for s in v) for k, v in kv_pools.items()}
+            if kv_pools else None)
+        # single-pool back-compat alias (None when multi-pool)
+        self.kv_block_shape = (next(iter(self.kv_pools.values()))
+                               if self.kv_pools and len(self.kv_pools) == 1
+                               else None)
+        if self.kv_pools:
+            chunks = {s[0] for s in self.kv_pools.values()}
+            if len(chunks) != 1:
+                raise ValueError(
+                    f"all pools must share the chunk (token) dim, got "
+                    f"{self.kv_pools}")
+            self.kv_chunk = int(next(iter(chunks)))
             lanes = lease_ops.LANES
-            self.kv_token_row = -(-self._kv_token_elems // lanes) * lanes
+            self._pool_meta: Dict[str, Dict[str, int]] = {}
+            off = 0
+            for name, shape in self.kv_pools.items():
+                te = int(np.prod(shape[1:]))
+                row = -(-te // lanes) * lanes
+                self._pool_meta[name] = {"offset": off, "token_elems": te,
+                                         "token_row": row}
+                off += row
+            self.kv_token_row = off
             self._kv_row = self.kv_chunk * self.kv_token_row
             if backend == "pallas":
                 self._kv_pool = jnp.zeros((self.n_blocks, self._kv_row),
@@ -207,6 +248,7 @@ class LeaseEngine:
                 self._kv_pool = np.zeros((self.n_blocks, self._kv_row),
                                          np.dtype(kv_dtype))
             self._kv_valid = np.zeros(self.n_blocks, bool)
+            self.stats.kv_pool_tokens = {n: 0 for n in self.kv_pools}
 
     # -- table views --------------------------------------------------------
 
@@ -222,49 +264,121 @@ class LeaseEngine:
 
     @property
     def has_kv(self) -> bool:
-        return self.kv_block_shape is not None
+        return self.kv_pools is not None
+
+    @property
+    def pool_names(self) -> List[str]:
+        return list(self.kv_pools) if self.kv_pools else []
+
+    def pool_offset(self, pool: str) -> int:
+        """Static column offset of a named stack's segment inside the
+        interleaved token row (a LANES multiple -- the decode kernels use
+        the same layout)."""
+        return self._pool_meta[pool]["offset"]
+
+    def pool_token_row(self, pool: str) -> int:
+        return self._pool_meta[pool]["token_row"]
+
+    def pool_token_elems(self, pool: str) -> int:
+        return self._pool_meta[pool]["token_elems"]
+
+    def _single_pool(self) -> str:
+        if len(self.kv_pools) != 1:
+            raise ValueError(
+                f"engine has pools {self.pool_names}: name one explicitly")
+        return next(iter(self.kv_pools))
 
     def kv_ok(self, bid: int) -> bool:
         """True when the pool slot holds content for the block's current
-        tag (set by write_kv, cleared by invalidate_kv)."""
+        tag (set by write_kv, cleared by invalidate_kv).  Per block: every
+        stack's segment is published together or not at all."""
         return bool(self.has_kv and self._kv_valid[bid])
 
     def kv_valid_count(self) -> int:
         return int(self._kv_valid.sum()) if self.has_kv else 0
 
-    def _pack_rows(self, blocks, n: int, xp):
-        """(n, *kv_block_shape) payloads -> (n, row) per-token-padded rows."""
+    def _pack_rows(self, blocks, n: int, xp, pool: str):
+        """(n, *pool_shape) payloads -> (n, chunk, row_p) token-padded."""
+        meta = self._pool_meta[pool]
         pad = ((0, 0), (0, 0),
-               (0, self.kv_token_row - self._kv_token_elems))
-        flat = xp.pad(xp.asarray(blocks).reshape(
-            n, self.kv_chunk, self._kv_token_elems), pad)
-        return flat.reshape(n, self._kv_row)
+               (0, meta["token_row"] - meta["token_elems"]))
+        return xp.pad(xp.asarray(blocks).reshape(
+            n, self.kv_chunk, meta["token_elems"]), pad)
 
     def write_kv(self, idx, blocks) -> None:
-        """Scatter payloads into the pool: blocks (n, *kv_block_shape)."""
+        """Scatter block payloads into the pool(s) in ONE dispatch.
+
+        ``blocks`` is (n, *kv_block_shape) for a single-pool engine, or a
+        mapping ``{pool_name: (n, *pool_shape)}`` naming EVERY pool -- a
+        block's content is published for all stacks at once (the validity
+        bit is per block), which is what makes a block id lease both
+        stacks' payloads in one transition.
+        """
         idx = np.atleast_1d(np.asarray(idx, np.int64))
         if not idx.size:
             return
+        if not isinstance(blocks, Mapping):
+            blocks = {self._single_pool(): blocks}
+        if set(blocks) != set(self.kv_pools):
+            raise ValueError(f"write_kv needs every pool "
+                             f"{self.pool_names}, got {sorted(blocks)}")
+        xp = jnp if self.backend == "pallas" else np
+        flat = xp.concatenate(
+            [self._pack_rows(blocks[name], idx.size, xp, name)
+             for name in self.kv_pools], axis=-1
+        ).reshape(idx.size, self._kv_row)
         if self.backend == "pallas":
-            flat = self._pack_rows(blocks, idx.size, jnp)
             with warnings.catch_warnings():
                 # CPU XLA can't honor the donation; the TPU path does
                 warnings.filterwarnings("ignore", message=".*donated.*")
                 self._kv_pool = _scatter_rows(self._kv_pool,
                                               jnp.asarray(idx), flat)
         else:
-            flat = self._pack_rows(blocks, idx.size, np)
             self._kv_pool[idx] = flat.astype(self._kv_pool.dtype)
         self._kv_valid[idx] = True
         self.stats.kv_blocks_written += int(idx.size)
 
-    def read_kv(self, idx):
+    def _rows_to_blocks(self, rows, n: int, pool: str):
+        """(n, chunk, row_p) padded rows -> (n, *pool_shape) payloads."""
+        meta = self._pool_meta[pool]
+        return rows[:, :, :meta["token_elems"]].reshape(
+            (n,) + self.kv_pools[pool])
+
+    def read_kv(self, idx, pool: Optional[str] = None):
         """Materialize pool payloads for leased block ids via the Pallas
-        gather kernel; returns (n, *kv_block_shape)."""
+        gather kernel.
+
+        Single-pool engines return (n, *kv_block_shape).  Multi-pool
+        engines return ``{pool_name: (n, *pool_shape)}`` from ONE
+        full-row gather; ``pool=name`` instead gathers just that stack's
+        column window (the kernel's pool-offset index-map dimension) and
+        returns its array.
+        """
         idx = np.atleast_1d(np.asarray(idx, np.int64))
+        dtype = np.asarray(self._kv_pool[:0]).dtype
         if not idx.size:
-            return np.zeros((0,) + self.kv_block_shape,
-                            np.asarray(self._kv_pool[:0]).dtype)
+            if pool is not None or self.kv_block_shape:
+                shape = self.kv_pools[pool] if pool else self.kv_block_shape
+                return np.zeros((0,) + shape, dtype)
+            return {n_: np.zeros((0,) + s, dtype)
+                    for n_, s in self.kv_pools.items()}
+        if pool is not None:
+            meta = self._pool_meta[pool]
+            # token-granular gather over the stack's column window
+            rows_idx = (idx[:, None] * self.kv_chunk
+                        + np.arange(self.kv_chunk)).reshape(-1)
+            if self.backend == "pallas":
+                rows = lease_ops.gather_blocks(
+                    self.kv_rows_view(), jnp.asarray(rows_idx, jnp.int32),
+                    col_lo=meta["offset"], width=meta["token_row"],
+                    interpret=self.interpret)
+            else:
+                rows = self._kv_pool.reshape(-1, self.kv_token_row)[
+                    rows_idx,
+                    meta["offset"]:meta["offset"] + meta["token_row"]]
+            self.stats.kv_blocks_read += int(idx.size)
+            rows = rows.reshape(idx.size, self.kv_chunk, meta["token_row"])
+            return self._rows_to_blocks(rows, idx.size, pool)
         if self.backend == "pallas":
             rows = lease_ops.gather_blocks(
                 self._kv_pool, jnp.asarray(idx, jnp.int32),
@@ -273,8 +387,14 @@ class LeaseEngine:
             rows = self._kv_pool[idx]
         self.stats.kv_blocks_read += int(idx.size)
         rows = rows.reshape(idx.size, self.kv_chunk, self.kv_token_row)
-        return rows[:, :, :self._kv_token_elems].reshape(
-            (idx.size,) + self.kv_block_shape)
+        out = {}
+        for name, meta in self._pool_meta.items():
+            seg = rows[:, :, meta["offset"]:meta["offset"]
+                       + meta["token_row"]]
+            out[name] = self._rows_to_blocks(seg, idx.size, name)
+        if self.kv_block_shape:
+            return out[self._single_pool()]
+        return out
 
     def invalidate_kv(self, idx) -> None:
         """Free pool slots on collision eviction (re-tag): the content no
@@ -326,40 +446,93 @@ class LeaseEngine:
 
     def set_kv_rows(self, rows, tokens_appended: int = 0) -> None:
         """Write back the (possibly donated) rows view after a jitted
-        decode step appended token KV in place."""
+        decode step appended token KV in place.  An appended row spans the
+        whole interleaved token row, so it feeds every stack's counter."""
         pool = rows.reshape(self.n_blocks, self._kv_row)
         if self.backend == "pallas":
             self._kv_pool = pool
         else:
             self._kv_pool = np.asarray(pool)
         self.stats.kv_tokens_appended += int(tokens_appended)
+        for name in self.kv_pools:
+            self.stats.kv_pool_tokens[name] = (
+                self.stats.kv_pool_tokens.get(name, 0)
+                + int(tokens_appended))
 
-    def append_kv(self, rows_idx, token_rows) -> None:
-        """Host-side token append: scatter (n, token_elems) rows into flat
-        token slots ``rows_idx`` (= block_id * chunk + slot) through the
-        ``tardis_lease`` scatter kernel.  Marks the touched blocks' slots
-        as holding content (prefill writing a request's own pages)."""
+    def append_kv(self, rows_idx, token_rows,
+                  pool: Optional[str] = None) -> None:
+        """Host-side token append: scatter token rows into flat token slots
+        ``rows_idx`` (= block_id * chunk + slot) through the ``tardis_lease``
+        scatter kernel.
+
+        ``pool=None`` appends FULL token rows: (n, kv_token_row) already in
+        the interleaved multi-stack layout (the serving path packs every
+        stack's segment -- one scatter covers both cache stacks), or, on a
+        single-pool engine, the legacy unpadded (n, token_elems) form.
+        Marks the touched blocks' slots as holding content (prefill writing
+        a request's own pages).
+
+        ``pool=name`` appends one stack's (n, pool_token_elems) rows into
+        its column window only -- neighbors' segments keep their bits, and
+        validity is left untouched (publishing a block's content for every
+        stack is ``write_kv``'s job).
+        """
         rows_idx = np.atleast_1d(np.asarray(rows_idx, np.int64))
         if not rows_idx.size:
             return
+        if pool is not None:
+            meta = self._pool_meta[pool]
+            rows = np.asarray(token_rows).reshape(rows_idx.size,
+                                                  meta["token_elems"])
+            if self.backend == "pallas":
+                with warnings.catch_warnings():
+                    warnings.filterwarnings("ignore", message=".*donat.*")
+                    self._kv_pool = lease_ops.append_rows(
+                        self.kv_rows_view(),
+                        jnp.asarray(rows_idx, jnp.int32), jnp.asarray(rows),
+                        col_lo=meta["offset"], width=meta["token_row"],
+                        interpret=self.interpret,
+                    ).reshape(self.n_blocks, self._kv_row)
+            else:
+                # write the stack's WHOLE lane-padded window (zeros in the
+                # padding), exactly like the kernel's LANES-block DMA --
+                # touching only token_elems columns would leave the padding
+                # bits behind and break kernel/mirror bit-identity
+                flat = np.zeros((rows_idx.size, meta["token_row"]),
+                                self._kv_pool.dtype)
+                flat[:, :meta["token_elems"]] = rows.astype(
+                    self._kv_pool.dtype)
+                view = self._kv_pool.reshape(-1, self.kv_token_row)
+                view[rows_idx,
+                     meta["offset"]:meta["offset"] + meta["token_row"]] \
+                    = flat
+            self.stats.kv_tokens_appended += int(rows_idx.size)
+            self.stats.kv_pool_tokens[pool] = (
+                self.stats.kv_pool_tokens.get(pool, 0) + int(rows_idx.size))
+            return
+        rows = np.asarray(token_rows).reshape(rows_idx.size, -1)
+        if rows.shape[1] != self.kv_token_row:
+            # legacy single-pool form: unpadded token_elems rows
+            meta = self._pool_meta[self._single_pool()]
+            rows = rows.reshape(rows_idx.size, meta["token_elems"])
         if self.backend == "pallas":
             with warnings.catch_warnings():
                 warnings.filterwarnings("ignore", message=".*donat.*")
                 self._kv_pool = lease_ops.append_rows(
                     self.kv_rows_view(), jnp.asarray(rows_idx, jnp.int32),
-                    jnp.asarray(token_rows).reshape(
-                        rows_idx.size, self._kv_token_elems),
-                    interpret=self.interpret,
+                    jnp.asarray(rows), interpret=self.interpret,
                 ).reshape(self.n_blocks, self._kv_row)
         else:
             flat = np.zeros((rows_idx.size, self.kv_token_row),
                             self._kv_pool.dtype)
-            flat[:, :self._kv_token_elems] = np.asarray(token_rows).reshape(
-                rows_idx.size, self._kv_token_elems)
+            flat[:, :rows.shape[1]] = rows
             view = self._kv_pool.reshape(-1, self.kv_token_row)
             view[rows_idx] = flat
         self._kv_valid[np.unique(rows_idx // self.kv_chunk)] = True
         self.stats.kv_tokens_appended += int(rows_idx.size)
+        for name in self.kv_pools:       # a full row feeds every stack
+            self.stats.kv_pool_tokens[name] = (
+                self.stats.kv_pool_tokens.get(name, 0) + int(rows_idx.size))
 
     # -- protocol transitions ----------------------------------------------
 
@@ -617,7 +790,13 @@ class LeaseEngine:
 
     def report(self) -> dict:
         st = self.stats
+        per_pool = {}
+        if self.has_kv:
+            for name in self.kv_pools:
+                per_pool[f"kv_pool_tokens_{name}"] = \
+                    st.kv_pool_tokens.get(name, 0)
         return {
+            **per_pool,
             "blocks_read": st.reads,
             "blocks_written": st.writes,
             "read_ops": st.read_ops,

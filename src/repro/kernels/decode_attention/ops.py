@@ -37,16 +37,20 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
 
 
 @partial(jax.jit, static_argnames=("chunk", "k_off", "v_off", "hkv",
-                                   "interpret"))
+                                   "pool_off", "interpret"))
 def paged_decode_attention(q, cur_k, cur_v, pool_rows, page_rows, lengths,
                            *, chunk: int, k_off: int, v_off: int, hkv: int,
-                           interpret: bool = False):
+                           pool_off: int = 0, interpret: bool = False):
     """q: (B, 1, H, Dh); cur_k/cur_v: (B, 1, Hkv, Dh) (the decode token's
     fresh KV, already RoPE'd); pool_rows: (n_blocks*chunk, token_row);
     page_rows: (B, P) int32; lengths: (B,) int32.
 
-    ``k_off`` / ``v_off`` are the layer's static column offsets inside a
-    pool token row (rows pack every layer's K then V contiguously).
+    ``k_off`` / ``v_off`` are the layer's static column offsets inside its
+    cache stack's segment (a stack's rows pack every layer's K then V
+    contiguously) and ``pool_off`` is the stack's segment offset inside the
+    interleaved multi-pool token row (0 for single-stack families) -- the
+    kernel slices the page row at ``pool_off + k_off`` / ``pool_off +
+    v_off``, so one page DMA serves every stack living in the row.
     """
     b, one, h, dh = q.shape
     g = h // hkv
@@ -54,5 +58,5 @@ def paged_decode_attention(q, cur_k, cur_v, pool_rows, page_rows, lengths,
     out = paged_decode_attention_grouped(
         qg, cur_k.reshape(b, hkv, dh), cur_v.reshape(b, hkv, dh),
         pool_rows, page_rows, lengths, scale=dh ** -0.5, chunk=chunk,
-        k_off=k_off, v_off=v_off, interpret=interpret)
+        k_off=pool_off + k_off, v_off=pool_off + v_off, interpret=interpret)
     return out.reshape(b, 1, h, dh)

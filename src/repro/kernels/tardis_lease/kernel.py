@@ -33,7 +33,12 @@ requester of the wave observes the same table snapshot.
 ``_gather_kernel`` is the paged-KV materialization path: scalar-prefetched
 block ids drive the input index map directly (the classic paged-attention
 gather), so leased KV chunks stream from the pool into a replica's cache
-without a host round-trip.
+without a host round-trip.  Both the gather and the scatter
+(``scatter_rows``) take a **column window** -- a LANES-aligned
+``col_lo``/``width`` pair that becomes a second grid dimension in the
+index maps -- so a multi-pool engine (one named KV pool per cache stack,
+interleaved inside each token row) can stream or append a single stack's
+segment without touching its neighbors' bits.
 
 pts/lease (and ts for the advance pass) arrive via scalar prefetch so a
 serving engine can stream tables through the same compiled kernels.
@@ -213,52 +218,81 @@ def _scatter_kernel(idx_ref, rows_ref, pool_ref, out_ref):
     out_ref[...] = rows_ref[...]     # pool arrives via the in/out alias
 
 
-def scatter_rows(pool, idx, rows, *, interpret: bool = False):
-    """Scatter ``rows`` into ``pool[idx]`` on device: the append-KV path.
+def _col_blocks(col_lo: int, width: int):
+    """Column-window blocking for the pool kernels: a *pool offset* inside
+    an interleaved multi-stack token row becomes an extra grid dimension.
 
-    pool (N, W), idx (n,) int32, rows (n, W).  The scalar-prefetched ids
-    drive the *output* BlockSpec's index map and the pool buffer is aliased
-    input->output, so each grid step DMAs exactly one updated row into
-    place and every untouched row keeps its bits -- a decoded token's KV
-    lands in its page without a host round trip.  Rows listed twice keep
-    the last write (the grid is sequential).
+    The window [col_lo, col_lo + width) must be LANES-aligned (the
+    LeaseEngine pads every stack's token-row segment to LANES).  When the
+    offset is block-aligned the whole window moves in one DMA per row
+    (``n_cols == 1`` -- the single-pool fast path is unchanged bits);
+    otherwise the window streams in LANES-wide column blocks addressed by
+    the index map's second coordinate.
+    """
+    assert col_lo % LANES == 0 and width % LANES == 0, (col_lo, width)
+    bw = width if col_lo % width == 0 else LANES
+    return bw, width // bw, col_lo // bw
+
+
+def scatter_rows(pool, idx, rows, *, col_lo: int = 0,
+                 interpret: bool = False):
+    """Scatter ``rows`` into ``pool[idx, col_lo:col_lo+w]``: the append-KV
+    path.
+
+    pool (N, W), idx (n,) int32, rows (n, w) with ``col_lo + w <= W``.  The
+    scalar-prefetched ids drive the *output* BlockSpec's index map and the
+    pool buffer is aliased input->output, so each grid step DMAs exactly
+    one updated row (or LANES-wide column block of it) into place and every
+    untouched row -- and every column outside the window -- keeps its bits:
+    a decoded token's KV lands in its page without a host round trip, and a
+    per-stack append touches only that stack's segment of the interleaved
+    token row.  Rows listed twice keep the last write (the grid is
+    sequential).
     """
     n, width = rows.shape
+    bw, n_cols, col0 = _col_blocks(col_lo, width)
     return pl.pallas_call(
         _scatter_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(n,),
+            grid=(n, n_cols),
             in_specs=[
-                pl.BlockSpec((1, width), lambda i, idx_ref: (i, 0)),
-                pl.BlockSpec((1, width), lambda i, idx_ref: (idx_ref[i], 0)),
+                pl.BlockSpec((1, bw), lambda i, j, idx_ref: (i, j)),
+                pl.BlockSpec((1, bw),
+                             lambda i, j, idx_ref: (idx_ref[i], col0 + j)),
             ],
-            out_specs=pl.BlockSpec((1, width),
-                                   lambda i, idx_ref: (idx_ref[i], 0))),
+            out_specs=pl.BlockSpec(
+                (1, bw), lambda i, j, idx_ref: (idx_ref[i], col0 + j))),
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         input_output_aliases={2: 0},       # (scalars, rows, POOL) -> out
         interpret=interpret,
     )(jnp.asarray(idx, jnp.int32), rows, pool)
 
 
-def gather_rows(pool, idx, *, interpret: bool = False):
-    """Gather ``pool[idx]`` rows on device: pool (N, W), idx (n,) int32.
+def gather_rows(pool, idx, *, col_lo: int = 0, width: int = None,
+                interpret: bool = False):
+    """Gather ``pool[idx, col_lo:col_lo+width]`` on device: pool (N, W),
+    idx (n,) int32.
 
     The scalar-prefetched ids drive the input BlockSpec's index map, so each
     grid step DMAs exactly one leased block's payload row -- the paged-KV
-    materialization path of the serving engine.  W should be a multiple of
-    128 lanes (the LeaseEngine pads its pool rows).
+    materialization path of the serving engine.  ``col_lo``/``width`` name
+    a LANES-aligned column window (one stack's segment of an interleaved
+    multi-pool token row); the default gathers the whole row exactly as
+    before.
     """
     n = idx.shape[0]
-    width = pool.shape[1]
+    if width is None:
+        width = pool.shape[1] - col_lo
+    bw, n_cols, col0 = _col_blocks(col_lo, width)
     return pl.pallas_call(
         _gather_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(n,),
-            in_specs=[pl.BlockSpec((1, width),
-                                   lambda i, idx_ref: (idx_ref[i], 0))],
-            out_specs=pl.BlockSpec((1, width), lambda i, _idx: (i, 0))),
+            grid=(n, n_cols),
+            in_specs=[pl.BlockSpec(
+                (1, bw), lambda i, j, idx_ref: (idx_ref[i], col0 + j))],
+            out_specs=pl.BlockSpec((1, bw), lambda i, j, _idx: (i, j))),
         out_shape=jax.ShapeDtypeStruct((n, width), pool.dtype),
         interpret=interpret,
     )(jnp.asarray(idx, jnp.int32), pool)

@@ -124,22 +124,36 @@ def lease_check(wts, rts, req_wts, pts, lease, interpret: bool = False):
                               interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def gather_blocks(pool, idx, interpret: bool = False):
-    """Materialize pool rows for leased block ids: pool (N, W), idx (n,)."""
-    return gather_rows(pool, idx, interpret=interpret)
+@partial(jax.jit, static_argnames=("col_lo", "width", "interpret"))
+def gather_blocks(pool, idx, col_lo: int = 0, width: int = None,
+                  interpret: bool = False):
+    """Materialize pool rows for leased block ids: pool (N, W), idx (n,).
 
-
-@partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
-def append_rows(pool, idx, rows, interpret: bool = False):
-    """Scatter updated rows into ``pool[idx]`` device-side (append-KV path).
-
-    pool (N, W); idx (n,) int32; rows (n, w) with w <= W (right-padded with
-    zeros to the pool's row width).  Returns the updated pool; the input
-    pool buffer is donated/aliased so no full-pool copy happens on TPU.
+    ``col_lo``/``width`` select one named stack's LANES-aligned column
+    window of an interleaved multi-pool token row (default: the whole row).
     """
+    return gather_rows(pool, idx, col_lo=col_lo, width=width,
+                       interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("col_lo", "width", "interpret"),
+         donate_argnums=(0,))
+def append_rows(pool, idx, rows, col_lo: int = 0, width: int = None,
+                interpret: bool = False):
+    """Scatter updated rows into ``pool[idx, col_lo:...]`` device-side (the
+    append-KV path).
+
+    pool (N, W); idx (n,) int32; rows (n, w) right-padded with zeros to
+    ``width`` (default: the pool's full row width).  ``col_lo`` places the
+    window at a stack's segment of an interleaved multi-pool token row --
+    columns outside [col_lo, col_lo + width) keep their bits.  Returns the
+    updated pool; the input pool buffer is donated/aliased so no full-pool
+    copy happens on TPU.
+    """
+    if width is None:
+        width = pool.shape[1] - col_lo
     w = rows.shape[1]
-    if w != pool.shape[1]:
-        rows = jnp.pad(rows, ((0, 0), (0, pool.shape[1] - w)))
-    return scatter_rows(pool, idx, rows.astype(pool.dtype),
+    if w != width:
+        rows = jnp.pad(rows, ((0, 0), (0, width - w)))
+    return scatter_rows(pool, idx, rows.astype(pool.dtype), col_lo=col_lo,
                         interpret=interpret)

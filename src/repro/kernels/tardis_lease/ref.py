@@ -66,10 +66,22 @@ def lease_check_ref(wts, rts, req_wts, pts, lease):
                                   pts, lease)
 
 
-def append_rows_ref(pool, idx, rows):
-    """Oracle for the append-KV scatter: pool.at[idx].set(rows) with rows
-    right-padded to the pool's row width (last write wins on duplicates)."""
+def append_rows_ref(pool, idx, rows, col_lo: int = 0, width: int = None):
+    """Oracle for the append-KV scatter: pool.at[idx, window].set(rows) with
+    rows right-padded to the window width (last write wins on duplicates);
+    ``col_lo``/``width`` select a stack's column window of an interleaved
+    multi-pool token row (default: the whole row)."""
+    if width is None:
+        width = pool.shape[1] - col_lo
     w = rows.shape[1]
-    if w != pool.shape[1]:
-        rows = jnp.pad(rows, ((0, 0), (0, pool.shape[1] - w)))
-    return pool.at[jnp.asarray(idx)].set(rows.astype(pool.dtype))
+    if w != width:
+        rows = jnp.pad(rows, ((0, 0), (0, width - w)))
+    return pool.at[jnp.asarray(idx), col_lo:col_lo + width].set(
+        rows.astype(pool.dtype))
+
+
+def gather_blocks_ref(pool, idx, col_lo: int = 0, width: int = None):
+    """Oracle for the paged-KV gather with a stack column window."""
+    if width is None:
+        width = pool.shape[1] - col_lo
+    return pool[jnp.asarray(idx), col_lo:col_lo + width]

@@ -1,9 +1,11 @@
 """Model zoo: every assigned architecture family as pure-functional JAX."""
 from .transformer import (abstract_params, forward, init_params, logits_fn,
                           loss_fn)
-from .decoding import (PAGED_FAMILIES, decode_step, decode_step_paged,
-                       init_cache, prefill, prefill_suffix)
+from .decoding import (PAGED_FAMILIES, StackSpec, decode_step,
+                       decode_step_paged, init_cache, pool_layout, prefill,
+                       prefill_suffix)
 
 __all__ = ["abstract_params", "forward", "init_params", "logits_fn",
            "loss_fn", "decode_step", "decode_step_paged", "PAGED_FAMILIES",
-           "init_cache", "prefill", "prefill_suffix"]
+           "StackSpec", "pool_layout", "init_cache", "prefill",
+           "prefill_suffix"]

@@ -7,7 +7,7 @@ so decode HLO is O(1) in depth like the forward pass.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,13 +20,59 @@ from .ssm import ssm_block
 from .transformer import (Params, _embed, _head, attn_decode,
                           attn_decode_paged, attn_prefill,
                           attn_prefill_cached, cross_apply, enc_kv_of,
-                          logits_fn, paged_kv_offsets)
+                          logits_fn)
 
 Cache = Dict[str, Any]
 
 # families whose decode KV can live in LeaseEngine pool pages (an SSM state
-# is not position-addressable block-wise; MoE dual cache stacks pending)
-PAGED_FAMILIES = ("dense", "vlm")
+# is not position-addressable block-wise; moe pages BOTH its cache stacks
+# through named pools interleaved in one token row)
+PAGED_FAMILIES = ("dense", "vlm", "moe")
+
+
+class StackSpec(NamedTuple):
+    """One paged KV cache stack: which params/cache it belongs to and where
+    its segment lives inside the engine's interleaved pool token row."""
+    pool: str           # LeaseEngine pool name
+    params_key: str     # p[...] stacked layer params
+    cache_keys: Tuple[str, str]   # dense-cache (k, v) names for this stack
+    n_layers: int       # layers in this stack
+    kind: str           # "mlp" | "moe" (the layer body after attention)
+    offset: int         # element column offset of the segment in the row
+    token_elems: int    # unpadded elements per token (2 * n_layers*hk*dh)
+
+
+def pool_layout(cfg: ArchConfig) -> List[StackSpec]:
+    """Ordered cache stacks of a paged family and their token-row layout.
+
+    The single source of truth shared by the models (static ``k_off`` /
+    ``v_off`` per layer), the serving engine (``kv_pools`` construction --
+    ``ServingCluster`` asserts the engine computed the same offsets), and
+    the differential tests.  Each stack's per-token segment packs all its
+    layers' K then all its layers' V and is lane-padded; segments are laid
+    out back to back in forward-pass order, so the moe family's leading
+    dense stack comes first.
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"no paged layout for family {cfg.family!r}")
+    hkd = cfg.n_kv_heads * cfg.head_dim()
+    if cfg.family == "moe":
+        stacks = []
+        if cfg.first_dense_layers:
+            stacks.append(("dense", "dense_layers", ("dk", "dv"),
+                           cfg.first_dense_layers, "mlp"))
+        stacks.append(("moe", "layers", ("k", "v"),
+                       cfg.n_layers - cfg.first_dense_layers, "moe"))
+    else:
+        stacks = [("kv", "layers", ("k", "v"), cfg.n_layers, "mlp")]
+    from ..kernels.tardis_lease.kernel import LANES
+    out, off = [], 0
+    for pool, pkey, ckeys, n, kind in stacks:
+        te = 2 * n * hkd
+        out.append(StackSpec(pool, pkey, ckeys, n, kind, off, te))
+        off += -(-te // LANES) * LANES
+    return out
 
 
 def _attn_cache(cfg, n, b, t, dtype):
@@ -203,26 +249,39 @@ def decode_step_paged(cfg: ArchConfig, p: Params, pool_rows, page_rows,
     b = x.shape[0]
     hkd = cfg.n_kv_heads * cfg.head_dim()
     lengths = jnp.asarray(lengths, jnp.int32)
-    row_buf = jnp.zeros((b, 2 * cfg.n_layers * hkd), pool_rows.dtype)
-    for l in range(cfg.n_layers):
-        layer = jax.tree.map(lambda t, l=l: t[l], p["layers"])
-        x = replicate(x)
-        y, kd, vd = attn_decode_paged(
-            layer["attn"], cfg, x, pool_rows, page_rows, lengths, l,
-            chunk=chunk, interpret=interpret, use_kernel=use_kernel)
-        x = x + y
-        xn = rmsnorm(x, layer["mlp_norm"], cfg.norm_eps)
-        x = x + swiglu(layer["mlp"], xn)
-        k_off, v_off = paged_kv_offsets(cfg, l)
-        row_buf = row_buf.at[:, k_off:k_off + hkd].set(kd.reshape(b, hkd))
-        row_buf = row_buf.at[:, v_off:v_off + hkd].set(vd.reshape(b, hkd))
-    # ONE append per step: the token's whole row (every layer's K and V)
-    # lands in its page via the scalar-prefetched scatter kernel
+    # one token row spanning EVERY cache stack's segment: the moe family's
+    # dual stacks accumulate into the same buffer at their pool offsets and
+    # land in the page together, in the single scatter below
+    row_buf = jnp.zeros((b, pool_rows.shape[1]), pool_rows.dtype)
+    for spec in pool_layout(cfg):
+        for l in range(spec.n_layers):
+            layer = jax.tree.map(lambda t, l=l: t[l], p[spec.params_key])
+            if not (cfg.family == "moe" and spec.kind == "mlp"):
+                # the dense decode path replicates inside the moe/dense
+                # scan bodies but not in moe's leading dense stack --
+                # mirror it exactly (replicate is numerically identity)
+                x = replicate(x)
+            y, kd, vd = attn_decode_paged(
+                layer["attn"], cfg, x, pool_rows, page_rows, lengths,
+                l * hkd, (spec.n_layers + l) * hkd, pool_off=spec.offset,
+                chunk=chunk, interpret=interpret, use_kernel=use_kernel)
+            x = x + y
+            xn = rmsnorm(x, layer["mlp_norm"], cfg.norm_eps)
+            if spec.kind == "moe":
+                x = x + moe_apply(layer["moe"], cfg, xn)
+            else:
+                x = x + swiglu(layer["mlp"], xn)
+            k_off = spec.offset + l * hkd
+            v_off = spec.offset + (spec.n_layers + l) * hkd
+            row_buf = row_buf.at[:, k_off:k_off + hkd].set(
+                kd.reshape(b, hkd))
+            row_buf = row_buf.at[:, v_off:v_off + hkd].set(
+                vd.reshape(b, hkd))
+    # ONE append per step: the token's whole row (every stack's, every
+    # layer's K and V) lands in its page via the scalar-prefetched scatter
+    # kernel
     flat_idx = (page_rows[jnp.arange(b), lengths // chunk] * chunk
                 + lengths % chunk)
-    pad = pool_rows.shape[1] - row_buf.shape[1]
-    if pad:
-        row_buf = jnp.pad(row_buf, ((0, 0), (0, pad)))
     pool_rows = scatter_rows(pool_rows, flat_idx, row_buf,
                              interpret=interpret)
     x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
@@ -320,11 +379,13 @@ def prefill_suffix(cfg: ArchConfig, p: Params, batch, cache: Cache,
     the prefix KV (materialized from the serving engine's paged pool);
     ``batch["tokens"]`` carries only the suffix.  Each suffix query attends
     over [leased prefix KV; its own causal suffix KV], so the prefix's
-    attention + MLP flops are skipped entirely.  Attention-cache families
-    only (an SSM state is not position-addressable block-wise).
+    attention + MLP/MoE flops are skipped entirely.  Attention-cache
+    families only (an SSM state is not position-addressable block-wise);
+    the moe family runs its leading dense stack and its moe stack through
+    the same cached-prefill attention, each against its own cache stack.
     """
     fam = cfg.family
-    if fam not in ("dense", "vlm"):
+    if fam not in PAGED_FAMILIES:
         raise NotImplementedError(
             f"prefix-KV suffix prefill supports attention-cache families, "
             f"not {fam!r}")
@@ -333,17 +394,28 @@ def prefill_suffix(cfg: ArchConfig, p: Params, batch, cache: Cache,
     positions = jnp.broadcast_to(
         prefix_len + jnp.arange(s, dtype=jnp.int32), (b, s))
 
-    def body(xx, xs):
-        layer, kc, vc = xs
-        y, kc, vc = attn_prefill_cached(layer["attn"], cfg, xx, positions,
-                                        kc, vc, prefix_len)
-        xx = xx + y
-        xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
-        return xx + swiglu(layer["mlp"], xn), (kc, vc)
+    def make_body(kind):
+        def body(xx, xs):
+            layer, kc, vc = xs
+            y, kc, vc = attn_prefill_cached(layer["attn"], cfg, xx,
+                                            positions, kc, vc, prefix_len)
+            xx = xx + y
+            xn = rmsnorm(xx, layer["mlp_norm"], cfg.norm_eps)
+            if kind == "moe":
+                xx = xx + moe_apply(layer["moe"], cfg, xn)
+            else:
+                xx = xx + swiglu(layer["mlp"], xn)
+            return xx, (kc, vc)
+        return body
 
-    x, (k, v) = jax.lax.scan(body, x, (p["layers"], cache["k"], cache["v"]))
+    out: Cache = {}
+    for spec in pool_layout(cfg):
+        ck, cv = spec.cache_keys
+        x, (k, v) = jax.lax.scan(make_body(spec.kind), x,
+                                 (p[spec.params_key], cache[ck], cache[cv]))
+        out[ck], out[cv] = k, v
     x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
-    return {"k": k, "v": v}, _last_logits(cfg, p, x, last_idx)
+    return out, _last_logits(cfg, p, x, last_idx)
 
 
 def _encdec_prefill(cfg, p, batch, cache_len, dtype=jnp.bfloat16):

@@ -36,6 +36,15 @@ def moe_init(key, cfg, dtype):
 
 
 def _capacity(cfg, n_tokens: int) -> int:
+    """Expert capacity for a dispatch of ``n_tokens`` (= B*S).
+
+    Decode calls this with S=1, so capacity tracks the LIVE batch size --
+    the paged decode step (``decoding.decode_step_paged``, moe stacks
+    through LeaseEngine named pools) and the dense-cache ``decode_step``
+    see the same ``n_tokens`` for the same batch, which is what keeps the
+    paged-vs-dense differential bit-exact: capacity (and therefore token
+    drop behaviour) is a function of the schedule, not of the KV substrate.
+    """
     c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
     return max(8, -(-c // 8) * 8)     # round up to 8 for lane alignment
 

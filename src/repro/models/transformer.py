@@ -136,24 +136,21 @@ def attn_decode(p, cfg, x, kc, vc, cur_idx):
     return y, kc, vc
 
 
-def paged_kv_offsets(cfg, layer: int):
-    """Static column offsets of a layer's K and V inside a pool token row
-    (rows pack (kv, layer*head, dh): all layers' K, then all layers' V)."""
-    hkd = cfg.n_kv_heads * cfg.head_dim()
-    return layer * hkd, (cfg.n_layers + layer) * hkd
-
-
-def attn_decode_paged(p, cfg, x, pool_rows, page_rows, lengths, layer: int,
-                      *, chunk: int, interpret: bool = False,
-                      use_kernel=None):
+def attn_decode_paged(p, cfg, x, pool_rows, page_rows, lengths, k_off: int,
+                      v_off: int, *, pool_off: int = 0, chunk: int,
+                      interpret: bool = False, use_kernel=None):
     """One-token decode where the KV cache lives in LeaseEngine pool pages.
 
     ``pool_rows`` is the engine pool's (n_blocks*chunk, token_row) view;
     ``page_rows`` (B, P) int32 names each request's pages (prefix blocks
     shared under leases + privately allocated decode pages); ``lengths``
-    (B,) counts the tokens already in pages.  Returns (y, k_cur, v_cur):
-    the fresh RoPE'd KV in pool dtype -- the caller accumulates every
-    layer's slice into one token row and appends it once per step.
+    (B,) counts the tokens already in pages.  ``k_off`` / ``v_off`` are the
+    layer's static column offsets WITHIN its cache stack's segment and
+    ``pool_off`` is the stack's pool offset inside the interleaved token
+    row (see :func:`repro.models.decoding.pool_layout`; 0 for
+    single-stack families).  Returns (y, k_cur, v_cur): the fresh RoPE'd
+    KV in pool dtype -- the caller accumulates every stack's layer slices
+    into one token row and appends it once per step.
 
     ``use_kernel=None`` routes through the Pallas paged flash-decode kernel
     on TPU; the default elsewhere is gather-then-reference, which is
@@ -166,7 +163,6 @@ def attn_decode_paged(p, cfg, x, pool_rows, page_rows, lengths, layer: int,
     q = apply_rope(q, pos, cfg.rope_theta, cfg.mrope)
     k = apply_rope(k, pos, cfg.rope_theta, cfg.mrope)
     hk, dh = cfg.n_kv_heads, cfg.head_dim()
-    k_off, v_off = paged_kv_offsets(cfg, layer)
     kd, vd = k.astype(pool_rows.dtype), v.astype(pool_rows.dtype)
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
@@ -175,14 +171,15 @@ def attn_decode_paged(p, cfg, x, pool_rows, page_rows, lengths, layer: int,
         out = paged_decode_attention(
             q, kd, vd, pool_rows, page_rows, jnp.asarray(lengths, jnp.int32),
             chunk=chunk, k_off=k_off, v_off=v_off, hkv=hk,
-            interpret=interpret)
+            pool_off=pool_off, interpret=interpret)
     else:
         t = page_rows.shape[1] * chunk
         rows_idx = (jnp.asarray(page_rows, jnp.int32)[:, :, None] * chunk
                     + jnp.arange(chunk, dtype=jnp.int32)).reshape(b, t)
         gathered = pool_rows[rows_idx]                # (B, T, token_row)
-        kc = gathered[..., k_off:k_off + hk * dh].reshape(b, t, hk, dh)
-        vc = gathered[..., v_off:v_off + hk * dh].reshape(b, t, hk, dh)
+        lo_k, lo_v = pool_off + k_off, pool_off + v_off
+        kc = gathered[..., lo_k:lo_k + hk * dh].reshape(b, t, hk, dh)
+        vc = gathered[..., lo_v:lo_v + hk * dh].reshape(b, t, hk, dh)
         slot = jnp.arange(t, dtype=jnp.int32)[None, :] == pos
         kc = jnp.where(slot[..., None, None], kd, kc)
         vc = jnp.where(slot[..., None, None], vd, vc)

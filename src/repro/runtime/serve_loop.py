@@ -12,19 +12,26 @@ Weights go through :class:`repro.core.store.TardisStore`; the KV pool is a
 :class:`repro.core.lease_engine.LeaseEngine` whose read/renew/write-jump-
 ahead transitions run in the ``tardis_lease`` Pallas kernels.
 
-**Paged serving (dense/vlm).**  Every KV byte a decode step touches lives
-in LeaseEngine pool pages; there is no dense per-request cache on this
-path.  The pool is split into a content-addressed region (prompt-prefix
-chunks chain-hashed to block ids, shared across requests under leases) and
-an allocator region (private decode pages, free-listed).  A request's page
-table names its covered shared-prefix blocks followed by its own pages;
-prefill scatters the prompt's suffix KV into the own pages
+**Paged serving (dense/vlm/moe).**  Every KV byte a decode step touches
+lives in LeaseEngine pool pages; there is no dense per-request cache on
+this path.  The pool is split into a content-addressed region
+(prompt-prefix chunks chain-hashed to block ids, shared across requests
+under leases) and an allocator region (private decode pages, free-listed).
+A request's page table names its covered shared-prefix blocks followed by
+its own pages; prefill scatters the prompt's suffix KV into the own pages
 (``LeaseEngine.append_kv``) and each decode step appends the new token's
 KV through the ``tardis_lease`` scatter kernel inside the jitted step
 (:func:`repro.models.decode_step_paged`) -- no host round trip.  Decode
 attention streams K/V straight out of the pool (the gather path is
 bit-exact with the dense-cache decode; the Pallas paged flash-decode
-kernel is routed on TPU).
+kernel is routed on TPU).  The moe family's DUAL cache stacks (leading
+dense layers + moe layers) page through one engine with **named KV
+pools**: each stack's segment interleaves into the same token row at a
+static pool offset (:func:`repro.models.pool_layout` is the layout's
+single source of truth, asserted against the engine here), so one block id
+leases both stacks' payloads, one scatter per step appends both, and
+admission accounting (pages, occupancy, validity) counts both by
+construction.
 
 The request loop is a **continuous-batching scheduler**: requests join a
 replica's running batch as soon as a batch slot and enough free pool pages
@@ -40,8 +47,9 @@ re-addressing can never corrupt an in-flight decode.
 
 The lease protocol is batched per admission group: one logical tick, one
 ``read_many`` dispatch for every renewal and at most one jump-ahead write
-over the union of the misses.  moe/ssm/hybrid families (whose caches are
-not block-addressable yet) fall back to the fixed-wave dense-cache loop.
+over the union of the misses.  Only the ssm/hybrid families (whose
+recurrent states are not block-addressable) fall back to the fixed-wave
+dense-cache loop.
 
 The engine is single-process (replicas are cooperative objects) but every
 coherence message is accounted in flits, so benchmarks can compare against
@@ -62,10 +70,11 @@ import numpy as np
 from ..core.lease_engine import LeaseEngine
 from ..core.store import Replica, TardisStore
 from ..models import (PAGED_FAMILIES, decode_step, decode_step_paged,
-                      prefill, prefill_suffix)
+                      pool_layout, prefill, prefill_suffix)
 
 # families whose prefill KV cache is position-addressable block-wise, i.e.
-# can be carried through the paged KV pool (an SSM state cannot).
+# can be carried through the paged KV pool (an SSM state cannot); the moe
+# family pages both of its cache stacks through named pools.
 KV_POOL_FAMILIES = PAGED_FAMILIES
 
 
@@ -159,7 +168,9 @@ class DecodeReplica:
 
     def serve(self, reqs: List[Request], params=None) -> List[Request]:
         """Dense-cache fallback: greedy-decode a fixed wave of requests
-        (moe/ssm/hybrid families, whose caches are not block-addressable)."""
+        (ssm/hybrid families only -- their recurrent states are not
+        block-addressable; every attention-cache family, moe included,
+        serves through pool pages)."""
         if not reqs:
             return reqs
         if params is None:
@@ -186,14 +197,21 @@ class DecodeReplica:
         return reqs
 
 
-def _prefix_cache(kp, vp, batch, cache_len: int, skip: int):
-    """Per-layer (L, skip, hk, dh) leased prefix KV -> a request's
-    (L, B, cache_len, hk, dh) prefill cache with the prefix pre-filled."""
-    shape = (kp.shape[0], batch, cache_len) + kp.shape[2:]
-    kc = jnp.zeros(shape, jnp.bfloat16)
-    vc = jnp.zeros(shape, jnp.bfloat16)
-    return {"k": kc.at[:, :, :skip].set(kp[:, None].astype(jnp.bfloat16)),
-            "v": vc.at[:, :, :skip].set(vp[:, None].astype(jnp.bfloat16))}
+def _prefix_cache(stacks, pkv, batch, cache_len: int, skip: int):
+    """Leased prefix KV -> a request's prefill cache with the prefix
+    pre-filled, one entry pair per cache stack: ``pkv`` maps a stack's
+    pool name to its ((L_s, skip, hk, dh) k, v)."""
+    cache = {}
+    for s in stacks:
+        kp, vp = pkv[s.pool]
+        shape = (kp.shape[0], batch, cache_len) + kp.shape[2:]
+        kc = jnp.zeros(shape, jnp.bfloat16)
+        vc = jnp.zeros(shape, jnp.bfloat16)
+        cache[s.cache_keys[0]] = kc.at[:, :, :skip].set(
+            kp[:, None].astype(jnp.bfloat16))
+        cache[s.cache_keys[1]] = vc.at[:, :, :skip].set(
+            vp[:, None].astype(jnp.bfloat16))
+    return cache
 
 
 class ServingCluster:
@@ -228,18 +246,32 @@ class ServingCluster:
         self.n_prefix_blocks = int(n_prefix_blocks)
         self.n_decode_pages = int(n_decode_pages)
         self.max_pages = int(max_pages)
+        # block_bytes covers EVERY cache stack of a block (2 * n_layers
+        # counts the moe family's dense + moe stacks together)
         kv_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim()
                     * 4 * self.prefix_block_tokens)
-        kv_shape = None
+        kv_pools = None
+        self._stacks = []
         if self.prefix_reuse and cfg.family in KV_POOL_FAMILIES:
-            kv_shape = (self.prefix_block_tokens, 2,
-                        cfg.n_layers * cfg.n_kv_heads, cfg.head_dim())
+            # one NAMED pool per cache stack (moe: dense + moe), all
+            # leasing through the same block table and free list
+            self._stacks = pool_layout(cfg)
+            hk, dh = cfg.n_kv_heads, cfg.head_dim()
+            kv_pools = {s.pool: (self.prefix_block_tokens, 2,
+                                 s.n_layers * hk, dh)
+                        for s in self._stacks}
         n_blocks = self.n_prefix_blocks + (self.n_decode_pages
-                                           if kv_shape else 0)
+                                           if kv_pools else 0)
         self.prefix_engine = LeaseEngine(
             n_blocks, lease=kv_lease, block_bytes=kv_bytes,
             ts_bits=ts_bits, backend=prefix_backend,
-            kv_block_shape=kv_shape, alloc_reserve=self.n_prefix_blocks)
+            kv_pools=kv_pools, alloc_reserve=self.n_prefix_blocks)
+        if kv_pools:
+            for s in self._stacks:
+                # the models' static k/v offsets (pool_layout) and the
+                # engine's interleaved row must agree byte for byte
+                assert self.prefix_engine.pool_offset(s.pool) == s.offset, \
+                    (s, self.prefix_engine.pool_offset(s.pool))
         self._tags = np.full(n_blocks, -1, np.int64)       # content hashes
         # weight version each pool slot's KV was computed under: a request
         # may only reuse KV matching the weights it will serve with
@@ -279,12 +311,13 @@ class ServingCluster:
             self._prefill_fn = jax.jit(
                 lambda p, b, cl, li: prefill(cfg, p, b, cl, last_idx=li),
                 static_argnums=2)
+            stacks = self._stacks
             self._psuffix_fn = jax.jit(
-                lambda p, b, kp, vp, n, cl, li: prefill_suffix(
+                lambda p, b, pkv, n, cl, li: prefill_suffix(
                     cfg, p, b,
-                    _prefix_cache(kp, vp, b["tokens"].shape[0], cl, n), n,
-                    last_idx=li),
-                static_argnums=(4, 5))
+                    _prefix_cache(stacks, pkv, b["tokens"].shape[0], cl, n),
+                    n, last_idx=li),
+                static_argnums=(3, 4))
 
     def publish_weights(self, params) -> int:
         """Hot-swap: no invalidation broadcast; replicas renew on expiry.
@@ -452,39 +485,62 @@ class ServingCluster:
             for rep in self.replicas:
                 rep.rebase_kv(shift)
 
-    # -- paged-KV pool <-> per-layer cache layout ---------------------------
+    # -- paged-KV pool <-> per-stack cache layout ---------------------------
 
-    def _pool_to_layer_kv(self, pooled) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """(nb, chunk, 2, L*hk, dh) pool blocks -> per-layer (L, P, hk, dh)
-        k and v, P = nb * chunk contiguous prefix tokens."""
-        nb, bt = pooled.shape[0], self.prefix_block_tokens
-        layers, hk = self.cfg.n_layers, self.cfg.n_kv_heads
-        dh = self.cfg.head_dim()
-        kv = jnp.asarray(pooled).reshape(nb, bt, 2, layers, hk, dh)
-        kv = kv.transpose(2, 3, 0, 1, 4, 5).reshape(2, layers, nb * bt,
-                                                    hk, dh)
-        return kv[0], kv[1]
+    def _read_kv_stacks(self, bids) -> Dict[str, Any]:
+        """Engine pool payloads for leased block ids as a per-stack dict
+        (a single-pool engine returns a bare array; normalize it)."""
+        out = self.prefix_engine.read_kv(bids)
+        if not isinstance(out, dict):
+            out = {self._stacks[0].pool: out}
+        return out
 
-    def _cache_block_kv(self, cache, ri: int, chunk: int) -> jnp.ndarray:
-        """One request's prefix chunk out of a prefill cache, in the
-        pool's (chunk, 2, L*hk, dh) block layout."""
+    def _pool_to_stack_kv(self, pooled: Dict[str, Any]) -> Dict[str, Tuple]:
+        """{pool: (nb, chunk, 2, L_s*hk, dh)} blocks -> {pool: (k, v)} with
+        per-layer (L_s, P, hk, dh), P = nb * chunk contiguous prefix
+        tokens -- one entry per cache stack."""
+        bt = self.prefix_block_tokens
+        hk, dh = self.cfg.n_kv_heads, self.cfg.head_dim()
+        out = {}
+        for s in self._stacks:
+            nb = pooled[s.pool].shape[0]
+            kv = jnp.asarray(pooled[s.pool]).reshape(
+                nb, bt, 2, s.n_layers, hk, dh)
+            kv = kv.transpose(2, 3, 0, 1, 4, 5).reshape(
+                2, s.n_layers, nb * bt, hk, dh)
+            out[s.pool] = (kv[0], kv[1])
+        return out
+
+    def _cache_block_kv(self, cache, ri: int, chunk: int) -> Dict[str, Any]:
+        """One request's prefix chunk out of a prefill cache, per stack in
+        the pool's (chunk, 2, L_s*hk, dh) block layout."""
         bt = self.prefix_block_tokens
         lo = chunk * bt
-        kv = jnp.stack([cache["k"][:, ri, lo:lo + bt],
-                        cache["v"][:, ri, lo:lo + bt]])   # (2, L, bt, hk, dh)
-        layers, hk = self.cfg.n_layers, self.cfg.n_kv_heads
-        return kv.transpose(2, 0, 1, 3, 4).reshape(
-            bt, 2, layers * hk, self.cfg.head_dim())
+        hk, dh = self.cfg.n_kv_heads, self.cfg.head_dim()
+        out = {}
+        for s in self._stacks:
+            kv = jnp.stack([cache[s.cache_keys[0]][:, ri, lo:lo + bt],
+                            cache[s.cache_keys[1]][:, ri, lo:lo + bt]])
+            out[s.pool] = kv.transpose(2, 0, 1, 3, 4).reshape(
+                bt, 2, s.n_layers * hk, dh)      # (bt, 2, L_s*hk, dh)
+        return out
 
     def _cache_token_rows(self, cache, lo: int, hi: int) -> np.ndarray:
-        """Positions [lo, hi) of a B=1 prefill cache as (hi-lo, token_elems)
-        pool token rows (all layers' K then V, the pool's packing)."""
-        k = np.asarray(cache["k"][:, 0, lo:hi])       # (L, m, hk, dh)
-        v = np.asarray(cache["v"][:, 0, lo:hi])
+        """Positions [lo, hi) of a B=1 prefill cache as (hi-lo,
+        kv_token_row) FULL pool token rows: every stack's segment packed at
+        its pool offset (the stack's layers' K then V), zeros in the
+        inter-segment lane padding -- one append covers both cache
+        stacks."""
         m = hi - lo
-        kr = k.transpose(1, 0, 2, 3).reshape(m, -1)
-        vr = v.transpose(1, 0, 2, 3).reshape(m, -1)
-        return np.concatenate([kr, vr], axis=1)
+        rows = np.zeros((m, self.prefix_engine.kv_token_row), np.float32)
+        for s in self._stacks:
+            k = np.asarray(cache[s.cache_keys[0]][:, 0, lo:hi])
+            v = np.asarray(cache[s.cache_keys[1]][:, 0, lo:hi])
+            kr = k.transpose(1, 0, 2, 3).reshape(m, -1)
+            vr = v.transpose(1, 0, 2, 3).reshape(m, -1)
+            rows[:, s.offset:s.offset + s.token_elems] = \
+                np.concatenate([kr, vr], axis=1)
+        return rows
 
     # -- continuous-batching paged scheduler --------------------------------
 
@@ -575,24 +631,26 @@ class ServingCluster:
         if skip:
             key = tuple(bids[:covered])
             if key not in mat_cache:
-                mat_cache[key] = self._pool_to_layer_kv(
-                    eng.read_kv(list(key)))
-            kp, vp = mat_cache[key]
+                mat_cache[key] = self._pool_to_stack_kv(
+                    self._read_kv_stacks(list(key)))
             cache, logits = self._psuffix_fn(params, {"tokens": toks},
-                                             kp, vp, skip, cache_len, last)
+                                             mat_cache[key], skip,
+                                             cache_len, last)
             ps["prefix_prefill_tokens_skipped"] += skip
             ps["prefix_flops_saved"] += skip * self._flops_per_token
         else:
             cache, logits = self._prefill_fn(params, {"tokens": toks},
                                              cache_len, last)
         # payload write-back: the blocks this request owns per the plan
+        # (every cache stack's payload published in one write_kv)
         wb = [(bid, c) for bid, (ri, c) in plan.miss_writers.items()
               if ri == ji]
         wb += [(bid, c) for bid, (ri, c) in plan.repair_writers.items()
                if ri == ji and bid not in plan.miss_writers]
         if wb:
-            blocks = jnp.stack([self._cache_block_kv(cache, 0, c)
-                                for _, c in wb])
+            per_block = [self._cache_block_kv(cache, 0, c) for _, c in wb]
+            blocks = {s.pool: jnp.stack([d[s.pool] for d in per_block])
+                      for s in self._stacks}
             eng.write_kv([bid for bid, _ in wb], blocks)
             self._pool_wver[[bid for bid, _ in wb]] = \
                 -1 if wver is None else int(wver)
@@ -745,7 +803,7 @@ class ServingCluster:
 
     def _serve_wave(self, rep: DecodeReplica, wave: List[Request],
                     plan: Optional[WavePlan]) -> None:
-        """Dense-cache fallback wave (moe/ssm/hybrid): the lease protocol
+        """Dense-cache fallback wave (ssm/hybrid only): the lease protocol
         still runs per wave (prefix metadata sharing), decode stays on the
         per-request dense caches.  Everything serve needs from the plan
         (per-request coverage, clamped in the plan itself) already lives in
@@ -810,4 +868,10 @@ class ServingCluster:
             "pool_pages_allocated": e.pages_allocated,
             "pool_pages_freed": e.pages_freed,
             "pool_pages_free": self.prefix_engine.free_page_count(),
+            # per-stack occupancy: one counter pair per named KV pool (the
+            # moe family reports its dense and moe cache stacks separately)
+            **{f"pool_tokens_appended_{s.pool}":
+               e.kv_pool_tokens.get(s.pool, 0) for s in self._stacks},
+            **({"kv_pool_stacks": ",".join(s.pool for s in self._stacks)}
+               if self._stacks else {}),
         }

@@ -460,3 +460,107 @@ def test_serving_prefix_reuse_reports_hits_and_renewals():
     assert rep["wire_flits"] > 0
     # reuse must beat a cold run: hits outnumber unique prefix writes
     assert rep["prefix_block_hits"] > rep["prefix_blocks_written"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-pool paged KV: named per-stack pools interleaved in one token row
+# ---------------------------------------------------------------------------
+
+MOE_POOLS = {"dense": (4, 2, 2, 4), "moe": (4, 2, 6, 4)}   # chunk 4
+
+
+@pytest.mark.parametrize("backend", ["pallas", "numpy"])
+def test_multi_pool_layout_and_roundtrip(backend):
+    """Named pools share one block table / free list: each stack's segment
+    sits at a static LANES-aligned offset, write_kv publishes every stack
+    in one dispatch, read_kv round-trips both full-row and per-stack
+    windowed gathers, and a per-stack append touches only its window."""
+    eng = LeaseEngine(16, lease=8, backend=backend, kv_pools=MOE_POOLS,
+                      kv_dtype=np.float32)
+    assert eng.pool_names == ["dense", "moe"]
+    assert eng.pool_offset("dense") == 0
+    assert eng.pool_offset("moe") == 128           # 16 elems -> 128 lanes
+    assert eng.kv_token_row == 256                 # 48 elems -> 128 lanes
+    assert eng.kv_block_shape is None              # no single-pool alias
+    rng = np.random.default_rng(0)
+    bd = rng.standard_normal((3, 4, 2, 2, 4)).astype(np.float32)
+    bm = rng.standard_normal((3, 4, 2, 6, 4)).astype(np.float32)
+    writes0 = eng.stats.kv_blocks_written
+    eng.write_kv([2, 5, 9], {"dense": bd, "moe": bm})
+    assert eng.stats.kv_blocks_written == writes0 + 3   # one transition/blk
+    out = eng.read_kv([2, 5, 9])
+    np.testing.assert_array_equal(np.asarray(out["dense"]), bd)
+    np.testing.assert_array_equal(np.asarray(out["moe"]), bm)
+    # per-stack windowed gather (the kernel's pool-offset index map)
+    np.testing.assert_array_equal(np.asarray(eng.read_kv([5], pool="moe")),
+                                  bm[1:2])
+    np.testing.assert_array_equal(
+        np.asarray(eng.read_kv([9], pool="dense")), bd[2:3])
+    # per-stack token append: neighbors' bits and validity stay put
+    tok = rng.standard_normal((2, 16)).astype(np.float32)
+    eng.append_kv([2 * 4 + 1, 5 * 4 + 0], tok, pool="dense")
+    out2 = eng.read_kv([2, 5])
+    np.testing.assert_array_equal(np.asarray(out2["moe"]), bm[:2])
+    np.testing.assert_array_equal(
+        np.asarray(out2["dense"])[0, 1].ravel(), tok[0])
+    np.testing.assert_array_equal(
+        np.asarray(out2["dense"])[1, 0].ravel(), tok[1])
+    assert eng.stats.kv_pool_tokens == {"dense": 2, "moe": 0}
+    # full-row append feeds both stacks and marks content
+    eng.append_kv([3 * 4 + 2], rng.standard_normal(
+        (1, eng.kv_token_row)).astype(np.float32))
+    assert eng.kv_ok(3)
+    assert eng.stats.kv_pool_tokens == {"dense": 3, "moe": 1}
+    # invalidation frees BOTH stacks (one bitmap bit per block)
+    eng.invalidate_kv([2])
+    assert not eng.kv_ok(2) and eng.kv_ok(5)
+    with pytest.raises(ValueError):
+        eng.write_kv([1], {"dense": bd[:1]})       # must name every pool
+
+
+def test_multi_pool_backends_bit_identical():
+    """kernel and mirror agree bit-for-bit on the whole interleaved pool
+    buffer after a mixed stream of writes and per-stack/full appends."""
+    engs = [LeaseEngine(16, lease=8, backend=b, kv_pools=MOE_POOLS,
+                        kv_dtype=np.float32) for b in ("pallas", "numpy")]
+    rng = np.random.default_rng(1)
+    bd = rng.standard_normal((3, 4, 2, 2, 4)).astype(np.float32)
+    bm = rng.standard_normal((3, 4, 2, 6, 4)).astype(np.float32)
+    tok = rng.standard_normal((2, 16)).astype(np.float32)
+    full = rng.standard_normal((1, 256)).astype(np.float32)
+    for eng in engs:
+        eng.write_kv([2, 5, 9], {"dense": bd, "moe": bm})
+        eng.append_kv([2 * 4 + 1, 5 * 4 + 0], tok, pool="dense")
+        eng.append_kv([3 * 4 + 2], full)
+        # a per-stack append over a row whose lane PADDING holds nonzero
+        # bits (the full random row above) must clear the whole padded
+        # window on both backends, like the kernel's LANES-block DMA
+        eng.append_kv([3 * 4 + 2], tok[:1], pool="dense")
+        eng.append_kv([3 * 4 + 2], tok[1:].repeat(3, axis=1), pool="moe")
+    np.testing.assert_array_equal(np.asarray(engs[0]._kv_pool),
+                                  np.asarray(engs[1]._kv_pool))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "numpy"])
+def test_multi_pool_rebase_and_page_free_cover_all_stacks(backend):
+    """A ts_bits rebase leaves every stack's payload bits intact, and
+    freeing a page invalidates both stacks at once."""
+    eng = LeaseEngine(8, lease=4, backend=backend, ts_bits=7,
+                      kv_pools=MOE_POOLS, kv_dtype=np.float32,
+                      alloc_reserve=4)
+    rng = np.random.default_rng(2)
+    bd = rng.standard_normal((2, 4, 2, 2, 4)).astype(np.float32)
+    bm = rng.standard_normal((2, 4, 2, 6, 4)).astype(np.float32)
+    eng.write_kv([1, 3], {"dense": bd, "moe": bm})
+    pts = 0
+    while eng.stats.rebases == 0:
+        pts = eng.write_many([[0, 1], [2, 3]], pts)
+        pts = LeaseEngine.rebase_pts(pts, eng.maybe_rebase())
+    out = eng.read_kv([1, 3])
+    np.testing.assert_array_equal(np.asarray(out["dense"]), bd)
+    np.testing.assert_array_equal(np.asarray(out["moe"]), bm)
+    pages = eng.alloc_pages(2)
+    eng.write_kv(pages, {"dense": bd, "moe": bm})
+    assert eng.kv_ok(pages[0]) and eng.kv_ok(pages[1])
+    eng.free_pages(pages)
+    assert not eng.kv_ok(pages[0]) and not eng.kv_ok(pages[1])

@@ -24,6 +24,17 @@ checked two ways:
 Backends must also agree bit-for-bit on every outcome, final table, and
 program timestamp.
 
+The litmus matrix is additionally parametrized over the **multi-pool
+engine**: the engine backends carry a dual-stack paged payload (two named
+KV pools interleaved in one token row, the moe serving layout) whose
+content encodes the version timestamp -- every store publishes both
+stacks' payloads through one ``write_kv`` and every manager read
+(including the injected decode-time block re-reads) checks that both
+stacks -- via the full-row gather AND the per-stack windowed gather --
+serve exactly the version the lease protocol names.  Pool payloads carry
+no timestamps, so the protocol-state comparison across all three backends
+is unchanged.
+
 Plus the per-wave batching contracts: randomized differential tests that
 ``read_many`` / ``write_many`` are bit-identical in ``wts/rts/pts`` to the
 per-request path issued at the wave's shared pts, and that the multi-row
@@ -47,18 +58,46 @@ N_ADDR = 2
 # The three timestamp-manager backends behind one interface
 # ---------------------------------------------------------------------------
 
-class EngineManager:
-    """LeaseEngine-backed manager (pallas kernel or numpy mirror)."""
+# dual-stack paged payload layout for the multi-pool litmus lane: two
+# named pools (the moe serving shape, reduced), chunk-1 token rows
+KV_POOLS = {"s0": (1, 2), "s1": (1, 3)}
 
-    def __init__(self, backend: str, lease: int):
-        self.eng = LeaseEngine(N_ADDR, lease=lease, backend=backend)
+
+class EngineManager:
+    """LeaseEngine-backed manager (pallas kernel or numpy mirror).
+
+    With ``pools=True`` the engine also carries the dual-stack paged
+    payload: a store publishes both stacks' content (the version timestamp
+    broadcast) through ONE ``write_kv`` on the block id, and a manager
+    read asserts both stacks serve exactly the version the protocol names
+    -- through the one-dispatch full-row gather and through each stack's
+    windowed gather (the kernels' pool-offset index-map dimension).
+    """
+
+    def __init__(self, backend: str, lease: int, pools: bool = False):
+        self.eng = LeaseEngine(N_ADDR, lease=lease, backend=backend,
+                               kv_pools=KV_POOLS if pools else None,
+                               kv_dtype=np.float32)
 
     def read(self, addr, pts, req):
         r = self.eng.read([addr], pts, req_wts=[req])
-        return int(r.wts[0]), int(r.rts[0]), int(r.new_pts)
+        w = int(r.wts[0])
+        if self.eng.has_kv and self.eng.kv_ok(addr):
+            got = self.eng.read_kv([addr])
+            for name, arr in got.items():
+                assert np.all(np.asarray(arr, np.float32) == w), \
+                    (addr, name, w, np.asarray(arr))
+                np.testing.assert_array_equal(
+                    np.asarray(self.eng.read_kv([addr], pool=name)),
+                    np.asarray(arr), err_msg=f"windowed gather {name}")
+        return w, int(r.rts[0]), int(r.new_pts)
 
     def write(self, addr, pts):
-        return self.eng.write([addr], pts)
+        ts = self.eng.write([addr], pts)
+        if self.eng.has_kv:
+            self.eng.write_kv([addr], {n: np.full((1,) + s, ts, np.float32)
+                                       for n, s in KV_POOLS.items()})
+        return ts
 
     def state(self):
         return self.eng.wts.tolist(), self.eng.rts.tolist()
@@ -202,13 +241,20 @@ def run_litmus(progs, schedule, make_mgr, decode_reads=0):
 
 
 @pytest.mark.parametrize("shape", sorted(LITMUS))
-@pytest.mark.parametrize("lease,decode_reads", [(1, 0), (4, 0), (4, 2)])
+@pytest.mark.parametrize("lease,decode_reads,pools",
+                         [(1, 0, False), (4, 0, False), (4, 2, False),
+                          (4, 2, True)])
 def test_litmus_forbidden_outcomes_never_observed(shape, lease,
-                                                  decode_reads):
+                                                  decode_reads, pools):
     progs, forbidden = LITMUS[shape]
     backends = {
-        "kernel": lambda: EngineManager("pallas", lease),
-        "mirror": lambda: EngineManager("numpy", lease),
+        # the multi-pool lane runs the same litmus matrix with dual-stack
+        # paged payloads riding the engine backends (decode-time re-reads
+        # then exercise dual-stack blocks); the scalar oracle has no pool
+        # -- payloads never touch protocol state, so all three backends
+        # must still agree bit-for-bit on every outcome and table
+        "kernel": lambda: EngineManager("pallas", lease, pools),
+        "mirror": lambda: EngineManager("numpy", lease, pools),
         "scalar": lambda: ScalarManager(lease),
     }
     for schedule in interleavings(progs):
