@@ -14,7 +14,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # whole suite).  CI runs this lane as its own named step and sets
 # REPRO_SKIP_FAST_LANE=1 here so the *dedicated* lane isn't repeated.
 if [ -z "${REPRO_SKIP_FAST_LANE:-}" ]; then
-    python -m pytest -q tests/test_litmus.py tests/test_lease_engine.py
+    # static protocol lints: table ownership + kernel ref mirrors (stdlib
+    # AST lint, always available); ruff when installed (CI pins it)
+    python scripts/lint_protocol.py
+    if command -v ruff >/dev/null 2>&1; then
+        ruff check src
+    else
+        echo "ruff not installed; skipping (CI runs the pinned version)"
+    fi
+    # bounded exhaustive model check: Tables I-III close under
+    # 2 cores / 1 block with every transition cross-validated against
+    # core.protocol and the LeaseEngine numpy mirror (seconds)
+    python scripts/model_check.py --cores 2 --blocks 1 --lease 2 --ts-bits 2
+    python -m pytest -q tests/test_litmus.py tests/test_lease_engine.py \
+        tests/test_model_check.py
 fi
 
 python -m pytest -x -q "$@"
@@ -36,9 +49,10 @@ EOF
 
 # serving smoke: tinyllama replicas with continuous-batching paged decode
 # through the LeaseEngine pool (--check asserts prefix hits, data-less
-# renewals, and a mid-batch admission).
-python examples/serve_tardis.py --replicas 2 --requests 16 --max-new 4 \
-    --layers 2 --d-model 64 --check
+# renewals, and a mid-batch admission).  TARDIS_SANITIZE=1 runs the whole
+# smoke with the lease sanitizer asserting after every engine transition.
+TARDIS_SANITIZE=1 python examples/serve_tardis.py --replicas 2 \
+    --requests 16 --max-new 4 --layers 2 --d-model 64 --check
 
 # moe serving smoke: kimi-k2 scaled-down pages BOTH cache stacks through
 # the engine's named pools -- the per-stack occupancy counters must move

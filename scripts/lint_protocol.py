@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Protocol-boundary AST lint.
+
+Two repo-specific rules, enforced in scripts/check.sh and CI:
+
+1. **Table ownership** -- only ``src/repro/core/`` may mutate the
+   ``(wts, rts)`` timestamp tables directly.  Outside ``core/`` any
+   assignment (plain, augmented, annotated, or through a subscript) whose
+   target is an attribute named ``wts`` / ``rts`` / ``_wts`` / ``_rts``
+   is flagged: everything else must go through the ``LeaseEngine`` /
+   ``protocol`` APIs (or the ``set_tables`` verification seam), or the
+   invariants the model checker proves stop meaning anything.
+
+2. **Kernel oracles** -- every public op in ``kernels/*/ops.py`` must
+   have a ``<name>_ref`` mirror in the sibling ``ref.py`` whose
+   parameters are a same-order prefix of the op's, with any op-only
+   extras (``interpret``, block sizes, ...) defaulted -- so the
+   differential tests can always call both sides with the same
+   arguments.
+
+Pure stdlib; no third-party imports.  Exits non-zero with one line per
+finding.
+"""
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src" / "repro"
+TS_NAMES = {"wts", "rts", "_wts", "_rts"}
+
+
+def _attr_target(node):
+    """The Attribute node a store target writes through, if any."""
+    if isinstance(node, ast.Attribute):
+        return node
+    if isinstance(node, ast.Subscript):
+        return _attr_target(node.value)
+    if isinstance(node, ast.Starred):
+        return _attr_target(node.value)
+    return None
+
+
+def check_table_mutation(path: Path, tree) -> list:
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            targets = []
+            for t in node.targets:
+                targets += t.elts if isinstance(t, ast.Tuple) else [t]
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        else:
+            continue
+        for t in targets:
+            attr = _attr_target(t)
+            if attr is not None and attr.attr in TS_NAMES:
+                findings.append(
+                    f"{path.relative_to(ROOT)}:{node.lineno}: mutates "
+                    f"timestamp table attribute '.{attr.attr}' outside "
+                    f"core/ (use the LeaseEngine/protocol API)")
+    return findings
+
+
+def _params(fn):
+    """Ordered (name, has_default) for positional + kw-only params."""
+    a = fn.args
+    pos = list(a.posonlyargs) + list(a.args)
+    out = []
+    n_def = len(a.defaults)
+    for k, arg in enumerate(pos):
+        out.append((arg.arg, k >= len(pos) - n_def))
+    for arg, d in zip(a.kwonlyargs, a.kw_defaults):
+        out.append((arg.arg, d is not None))
+    return out
+
+
+def check_kernel_mirrors(kdir: Path) -> list:
+    findings = []
+    ops_path = kdir / "ops.py"
+    ref_path = kdir / "ref.py"
+    ops_tree = ast.parse(ops_path.read_text())
+    if not ref_path.exists():
+        return [f"{ops_path.relative_to(ROOT)}: kernel has no ref.py "
+                f"oracle module"]
+    ref_tree = ast.parse(ref_path.read_text())
+    refs = {n.name: n for n in ref_tree.body
+            if isinstance(n, ast.FunctionDef)}
+    for node in ops_tree.body:
+        if not isinstance(node, ast.FunctionDef) \
+                or node.name.startswith("_"):
+            continue
+        where = f"{ops_path.relative_to(ROOT)}:{node.lineno}"
+        mirror = refs.get(node.name + "_ref")
+        if mirror is None:
+            findings.append(
+                f"{where}: public op '{node.name}' has no "
+                f"'{node.name}_ref' mirror in ref.py")
+            continue
+        op_params = _params(node)
+        ref_params = _params(mirror)
+        op_names = [n for n, _ in op_params]
+        ref_names = [n for n, _ in ref_params]
+        if op_names[:len(ref_names)] != ref_names:
+            findings.append(
+                f"{where}: '{node.name}' params {op_names} do not start "
+                f"with its ref mirror's params {ref_names}")
+            continue
+        extras = [n for n, d in op_params[len(ref_params):] if not d]
+        if extras:
+            findings.append(
+                f"{where}: '{node.name}' op-only params {extras} need "
+                f"defaults so the differential tests can call both sides "
+                f"with the same arguments")
+    return findings
+
+
+def main() -> int:
+    findings = []
+    core = SRC / "core"
+    for path in sorted(SRC.rglob("*.py")):
+        if core in path.parents:
+            continue
+        findings += check_table_mutation(path, ast.parse(path.read_text()))
+    for kdir in sorted((SRC / "kernels").iterdir()):
+        if kdir.is_dir() and (kdir / "ops.py").exists():
+            findings += check_kernel_mirrors(kdir)
+    for f in findings:
+        print(f, file=sys.stderr)
+    if findings:
+        print(f"lint_protocol: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("lint_protocol: OK (table ownership + kernel ref mirrors)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

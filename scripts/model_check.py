@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Exhaustively model-check the Tardis protocol on a bounded config.
+
+Enumerates every reachable state of the guarded-action model of Tables
+I-III (repro.analysis), checks the proof's invariants on each state and
+transition, and (by default) cross-validates every distinct rule
+application against the shipped ``core.protocol`` scalars and the numpy
+``LeaseEngine``.  Exits non-zero on any violation or if the state space
+fails to close under the cap.
+
+The CI fast lane runs the 2-core/1-block config (a few seconds)::
+
+    PYTHONPATH=src python scripts/model_check.py --cores 2 --blocks 1
+
+Bigger sweeps (3 cores, 2 blocks) are recorded in EXPERIMENTS.md.
+"""
+import argparse
+import sys
+
+from repro.analysis import Bridge, Config, TardisModel, explore
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--cores", type=int, default=2)
+    ap.add_argument("--blocks", type=int, default=1)
+    ap.add_argument("--lease", type=int, default=2)
+    ap.add_argument("--ts-bits", type=int, default=2,
+                    help="rebase threshold exponent (bounds the ts domain)")
+    ap.add_argument("--no-self-inc", action="store_true",
+                    help="disable spontaneous pts advance")
+    ap.add_argument("--no-pw-opt", action="store_true",
+                    help="disable the private-write optimization (IV-C), "
+                    "exercising the store_hit_exclusive rule instead")
+    ap.add_argument("--no-symmetry", action="store_true",
+                    help="disable the core/block permutation quotient")
+    ap.add_argument("--no-bridge", action="store_true",
+                    help="skip cross-validation against core.protocol and "
+                    "the numpy LeaseEngine")
+    ap.add_argument("--max-states", type=int, default=2_000_000)
+    args = ap.parse_args(argv)
+
+    cfg = Config(n_cores=args.cores, n_blocks=args.blocks,
+                 lease=args.lease, ts_bits=args.ts_bits,
+                 self_inc=not args.no_self_inc,
+                 pw_opt=not args.no_pw_opt,
+                 symmetry=not args.no_symmetry)
+    model = TardisModel(cfg)
+    bridge = None if args.no_bridge else Bridge(cfg.lease)
+    res = explore(model, bridge=bridge, max_states=args.max_states)
+
+    print(f"config: {cfg}")
+    print(f"states: {res.n_states}  transitions: {res.n_transitions}  "
+          f"depth: {res.max_depth}  wall: {res.wall_time:.1f}s")
+    print("rules fired: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(res.rule_counts.items())))
+    if bridge is not None:
+        print("bridge (distinct replays): " + ", ".join(
+            f"{k}={v}" for k, v in sorted(res.bridge_counts.items())))
+    if not res.closed:
+        print(f"FAIL: state space did not close under "
+              f"--max-states {args.max_states}", file=sys.stderr)
+        return 2
+    if res.violations:
+        print(f"FAIL: {len(res.violations)} invariant violation(s):",
+              file=sys.stderr)
+        for v in res.violations:
+            print(str(v), file=sys.stderr)
+        return 1
+    print("OK: state space closed, all invariants hold "
+          "(wts<=rts, single owner, value-ts consistency, pts "
+          "monotonicity, no deadlock)" +
+          ("" if args.no_bridge else ", cross-validated against "
+           "core.protocol and the numpy LeaseEngine"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,16 @@
+"""Static protocol analysis: guarded-action model checking + sanitizers.
+
+``model``    -- Tables I-III as explicit guarded transitions over bounded
+                state tuples (per-core pts, private lines, LLC, mts).
+``explore``  -- BFS exhaustive enumerator with invariant checking and
+                counterexample witness traces.
+``bridge``   -- cross-validation of every enumerated transition against the
+                shipped ``core.protocol`` scalars and the ``LeaseEngine``
+                numpy mirror (bit-identical wts/rts or it fails).
+``sanitize`` -- the runtime lease sanitizer behind ``TARDIS_SANITIZE=1`` /
+                ``LeaseEngine(sanitize=True)``.
+"""
+from .model import Config, Rules, TardisModel  # noqa: F401
+from .explore import ExploreResult, Violation, explore  # noqa: F401
+from .bridge import Bridge  # noqa: F401
+from .sanitize import LeaseSanitizer, SanitizeError  # noqa: F401

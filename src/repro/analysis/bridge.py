@@ -1,0 +1,142 @@
+"""Cross-validation bridge: the model checks the *shipped* rules.
+
+Every transition the enumerator takes records (a) the protocol-scalar
+calls it was built from and (b) the manager-table operation it corresponds
+to.  The bridge replays each **distinct** one:
+
+  * protocol calls go through the real ``core.protocol`` jnp scalars --
+    the model's pure-int transcription must match bit-for-bit,
+  * manager-table ops (``read`` / ``write`` / ``rebase``) go through a
+    small ``LeaseEngine(backend="numpy")`` loaded with the transition's
+    pre-state via :meth:`LeaseEngine.set_tables` -- the resulting
+    ``(wts, rts)`` and program timestamps must be identical ints.
+
+Replays are memoized on the operand tuple, so the cost is bounded by the
+number of distinct rule applications (a few thousand for the bounded
+configs), not the number of transitions (hundreds of thousands).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from ..core import protocol
+from ..core.lease_engine import LeaseEngine
+from .model import TransitionInfo
+
+
+def _ints(x):
+    """Flatten a scalar / tuple of jnp or python scalars to a tuple of
+    python ints (bools stay bools)."""
+    if isinstance(x, (tuple, list)):
+        return tuple(_ints(v) for v in x)
+    v = np.asarray(x).item()
+    return bool(v) if isinstance(v, (bool, np.bool_)) else int(v)
+
+
+class Bridge:
+    """Memoized replay of model transitions against the shipped code."""
+
+    def __init__(self, lease: int):
+        self.lease = int(lease)
+        self._seen = set()
+        self.counts: Dict[str, int] = {}
+
+    # -- protocol scalars ---------------------------------------------------
+
+    def _check_call(self, fname, args, expect) -> List[str]:
+        got = _ints(getattr(protocol, fname)(*args))
+        want = _ints(expect)
+        if got != want:
+            return [f"protocol.{fname}{tuple(args)} = {got}, model "
+                    f"computed {want}"]
+        return []
+
+    # -- manager-table ops through the numpy LeaseEngine --------------------
+
+    def _engine(self, n_blocks: int, ts_bits: int = 30) -> LeaseEngine:
+        return LeaseEngine(n_blocks, self.lease, backend="numpy",
+                           ts_bits=ts_bits)
+
+    def _check_read(self, wts, rts, pts, req, exp_rts, exp_pts):
+        eng = self._engine(1)
+        eng.set_tables([wts], [rts])
+        r = eng.read([0], pts, req_wts=[req])
+        errs = []
+        if int(r.rts[0]) != exp_rts or int(r.new_pts) != exp_pts:
+            errs.append(
+                f"engine.read(wts={wts}, rts={rts}, pts={pts}) -> "
+                f"rts {int(r.rts[0])}, pts {int(r.new_pts)}; model "
+                f"computed rts {exp_rts}, pts {exp_pts}")
+        if int(r.wts[0]) != wts:
+            errs.append(f"engine.read moved wts {wts} -> {int(r.wts[0])}")
+        exp_expired = bool(np.asarray(
+            protocol.shared_expired(pts, rts)).item())
+        exp_renew = bool(np.asarray(
+            protocol.renewable(req, wts)).item())
+        if bool(r.expired[0]) != exp_expired \
+                or bool(r.renew_ok[0]) != exp_renew:
+            errs.append(
+                f"engine.read flags (expired {bool(r.expired[0])}, renew "
+                f"{bool(r.renew_ok[0])}) disagree with protocol scalars "
+                f"({exp_expired}, {exp_renew})")
+        return errs
+
+    def _check_write(self, wts, rts, pts, exp_ts):
+        eng = self._engine(1)
+        eng.set_tables([wts], [rts])
+        ts = eng.write([0], pts)
+        errs = []
+        if int(ts) != exp_ts:
+            errs.append(f"engine.write(rts={rts}, pts={pts}) -> ts {ts}; "
+                        f"model computed {exp_ts}")
+        if int(eng.wts[0]) != exp_ts or int(eng.rts[0]) != exp_ts:
+            errs.append(f"engine.write left (wts, rts) = "
+                        f"({int(eng.wts[0])}, {int(eng.rts[0])}), "
+                        f"expected ({exp_ts}, {exp_ts})")
+        return errs
+
+    def _check_rebase(self, table, ts_bits, expect):
+        eng = self._engine(len(table), ts_bits=ts_bits)
+        eng.set_tables([w for w, _ in table], [r for _, r in table])
+        shift = eng.maybe_rebase()
+        errs = []
+        if shift != 1 << (ts_bits - 1):
+            errs.append(f"engine.maybe_rebase applied shift {shift}, "
+                        f"model expected {1 << (ts_bits - 1)}")
+        got = tuple((int(w), int(r)) for w, r in zip(eng.wts, eng.rts))
+        if got != tuple(expect):
+            errs.append(f"engine rebase left tables {got}, model computed "
+                        f"{tuple(expect)}")
+        return errs
+
+    # -- entry point --------------------------------------------------------
+
+    def validate(self, info: TransitionInfo) -> List[str]:
+        """Replay the transition's recorded calls; returns mismatches."""
+        errs = []
+        for fname, args, expect in info.calls:
+            key = (fname, args)
+            if key in self._seen:
+                continue
+            self._seen.add(key)
+            self.counts[fname] = self.counts.get(fname, 0) + 1
+            errs += self._check_call(fname, args, expect)
+        if info.engine_op is not None:
+            key = info.engine_op
+            if key not in self._seen:
+                self._seen.add(key)
+                op = key[0]
+                self.counts[f"engine.{op}"] = \
+                    self.counts.get(f"engine.{op}", 0) + 1
+                if op == "read":
+                    _, w, r, p, q, er, ep = key
+                    errs += self._check_read(w, r, p, q, er, ep)
+                elif op == "write":
+                    _, w, r, p, ts = key
+                    errs += self._check_write(w, r, p, ts)
+                elif op == "rebase":
+                    _, table, bits, expect = key
+                    errs += self._check_rebase(table, bits, expect)
+        return errs

@@ -73,6 +73,7 @@ unit of dispatch, and make the pool the only KV substrate decode touches:
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
 from functools import partial
 from typing import Dict, List, Mapping, Optional, Sequence, Union
@@ -174,7 +175,8 @@ class LeaseEngine:
                  block_bytes: int = 0, interpret: Optional[bool] = None,
                  kv_block_shape: Optional[Sequence[int]] = None,
                  kv_pools: Optional[Mapping[str, Sequence[int]]] = None,
-                 kv_dtype=jnp.bfloat16, alloc_reserve: int = 0):
+                 kv_dtype=jnp.bfloat16, alloc_reserve: int = 0,
+                 sanitize: Optional[bool] = None):
         if backend not in ("pallas", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
         self.n_blocks = int(n_blocks)
@@ -199,6 +201,8 @@ class LeaseEngine:
         self.alloc_reserve = int(alloc_reserve)
         self._free_pages = list(range(self.n_blocks - 1,
                                       self.alloc_reserve - 1, -1))
+        # O(1) membership for the double-free / never-allocated guards
+        self._free_set = set(self._free_pages)
         # paged KV payload pool(s): one row per block = ``chunk`` lane-padded
         # TOKEN rows back to back, so a single decoded token's KV is one
         # aligned row in the (n_blocks*chunk, token_row) flat view (the
@@ -249,6 +253,43 @@ class LeaseEngine:
                                          np.dtype(kv_dtype))
             self._kv_valid = np.zeros(self.n_blocks, bool)
             self.stats.kv_pool_tokens = {n: 0 for n in self.kv_pools}
+        # runtime lease sanitizer (repro.analysis.sanitize): host-side
+        # invariant checks after every transition.  Off by default; one
+        # ``is None`` branch per op when disabled.
+        if sanitize is None:
+            sanitize = os.environ.get("TARDIS_SANITIZE", "0").lower() \
+                not in ("", "0", "false", "off")
+        self._san = None
+        if sanitize:
+            from ..analysis.sanitize import LeaseSanitizer
+            self._san = LeaseSanitizer(self)
+
+    @property
+    def sanitize_checks(self) -> int:
+        """Transitions checked by the sanitizer (0 when it is off)."""
+        return self._san.checks if self._san is not None else 0
+
+    def set_tables(self, wts, rts) -> None:
+        """Verification seam: load externally computed ``(wts, rts)`` tables.
+
+        Used by the analysis bridge (:mod:`repro.analysis.bridge`) to replay
+        model-enumerated transitions through this engine, and by tests that
+        need a specific table state.  Resets the sanitizer's monotonicity
+        baseline -- the loaded state is a new ground truth, not a
+        transition.
+        """
+        wts = np.asarray(wts, np.int32).reshape(self.n_blocks)
+        rts = np.asarray(rts, np.int32).reshape(self.n_blocks)
+        if (wts > rts).any():
+            raise ValueError("set_tables: wts > rts")
+        if self.backend == "pallas":
+            self._wts = jnp.asarray(wts)
+            self._rts = jnp.asarray(rts)
+        else:
+            self._wts = wts.copy()
+            self._rts = rts.copy()
+        if self._san is not None:
+            self._san.rebaseline(self)
 
     # -- table views --------------------------------------------------------
 
@@ -337,6 +378,8 @@ class LeaseEngine:
             self._kv_pool[idx] = flat.astype(self._kv_pool.dtype)
         self._kv_valid[idx] = True
         self.stats.kv_blocks_written += int(idx.size)
+        if self._san is not None:
+            self._san.after(self, "write_kv", blocks=idx)
 
     def _rows_to_blocks(self, rows, n: int, pool: str):
         """(n, chunk, row_p) padded rows -> (n, *pool_shape) payloads."""
@@ -404,6 +447,8 @@ class LeaseEngine:
         freed = int(self._kv_valid[idx].sum())
         self._kv_valid[idx] = False
         self.stats.kv_evictions += freed
+        if self._san is not None:
+            self._san.after(self, "invalidate_kv", blocks=idx)
 
     # -- decode pages: allocator + token-granular append --------------------
 
@@ -420,22 +465,48 @@ class LeaseEngine:
                 f"page pool exhausted: want {n}, have {len(self._free_pages)}")
         ids = np.asarray([self._free_pages.pop() for _ in range(n)],
                          np.int64)
+        self._free_set.difference_update(int(b) for b in ids)
         self.stats.pages_allocated += int(n)
+        if self._san is not None:
+            self._san.after(self, "alloc_pages", idx=ids)
         return ids
 
     def free_pages(self, idx) -> None:
         """Return pages to the free list the moment a request finishes;
-        their payload slots are invalidated (no messages, like eviction)."""
+        their payload slots are invalidated (no messages, like eviction).
+
+        Freeing a page that is already free, was never handed out by
+        :meth:`alloc_pages` (the whole allocatable region starts free, so
+        any in-region page that is not free IS outstanding), or lies
+        outside the allocatable region raises ``ValueError`` before any
+        state changes -- a silent accept would put the id on the free list
+        twice and hand the same page to two requests.
+        """
         idx = np.atleast_1d(np.asarray(idx, np.int64))
         if not idx.size:
             return
+        ids = [int(b) for b in idx]
+        if len(set(ids)) != len(ids):
+            raise ValueError(
+                f"free_pages: duplicate page ids in one call: {sorted(ids)}")
+        for b in ids:
+            if not self.alloc_reserve <= b < self.n_blocks:
+                raise ValueError(
+                    f"free_pages: page {b} outside the allocatable region "
+                    f"[{self.alloc_reserve}, {self.n_blocks})")
+            if b in self._free_set:
+                raise ValueError(
+                    f"free_pages: page {b} is already free (double free, "
+                    f"or never allocated) -- freeing again would hand it "
+                    f"to two requests")
         if self.has_kv:
             self._kv_valid[idx] = False
-        for b in sorted((int(b) for b in idx), reverse=True):
-            if not self.alloc_reserve <= b < self.n_blocks:
-                raise ValueError(f"page {b} outside the allocatable region")
+        for b in sorted(ids, reverse=True):
             self._free_pages.append(b)
+            self._free_set.add(b)
         self.stats.pages_freed += int(idx.size)
+        if self._san is not None:
+            self._san.after(self, "free_pages", blocks=idx)
 
     def kv_rows_view(self):
         """The pool as (n_blocks*chunk, token_row) device rows -- the
@@ -458,6 +529,8 @@ class LeaseEngine:
             self.stats.kv_pool_tokens[name] = (
                 self.stats.kv_pool_tokens.get(name, 0)
                 + int(tokens_appended))
+        if self._san is not None:
+            self._san.after(self, "set_kv_rows")
 
     def append_kv(self, rows_idx, token_rows,
                   pool: Optional[str] = None) -> None:
@@ -509,6 +582,9 @@ class LeaseEngine:
             self.stats.kv_tokens_appended += int(rows_idx.size)
             self.stats.kv_pool_tokens[pool] = (
                 self.stats.kv_pool_tokens.get(pool, 0) + int(rows_idx.size))
+            if self._san is not None:       # validity untouched on this path
+                self._san.after(self, "append_kv",
+                                blocks=np.zeros(0, np.int64))
             return
         rows = np.asarray(token_rows).reshape(rows_idx.size, -1)
         if rows.shape[1] != self.kv_token_row:
@@ -528,11 +604,14 @@ class LeaseEngine:
             flat[:, :rows.shape[1]] = rows
             view = self._kv_pool.reshape(-1, self.kv_token_row)
             view[rows_idx] = flat
-        self._kv_valid[np.unique(rows_idx // self.kv_chunk)] = True
+        blocks = np.unique(rows_idx // self.kv_chunk)
+        self._kv_valid[blocks] = True
         self.stats.kv_tokens_appended += int(rows_idx.size)
         for name in self.kv_pools:       # a full row feeds every stack
             self.stats.kv_pool_tokens[name] = (
                 self.stats.kv_pool_tokens.get(name, 0) + int(rows_idx.size))
+        if self._san is not None:
+            self._san.after(self, "append_kv", blocks=blocks)
 
     # -- protocol transitions ----------------------------------------------
 
@@ -599,6 +678,8 @@ class LeaseEngine:
         # SH_REP: header + timestamp flits, plus the block payload.
         st.flits += payload * (protocol.MESSAGE_FLITS["RENEW_REP"]
                                + protocol.data_flits(self.block_bytes))
+        if self._san is not None:
+            self._san.after(self, "read", pts=int(pts), new_pts=new_pts)
         return ReadResult(expired, renew_ok, wts_at, rts_at, new_pts)
 
     def read_many(self, groups: Sequence, pts,
@@ -706,6 +787,9 @@ class LeaseEngine:
         st.flits += data_less * protocol.MESSAGE_FLITS["RENEW_REP"]
         st.flits += payload * (protocol.MESSAGE_FLITS["RENEW_REP"]
                                + protocol.data_flits(self.block_bytes))
+        if self._san is not None:
+            self._san.after(self, "read_many", pts=pts_vec,
+                            new_pts=new_pts)
         return ReadManyResult(union_idx, expired, renew_ok, wts_at, rts_at,
                               new_pts)
 
@@ -751,6 +835,8 @@ class LeaseEngine:
         st.payload_bytes += n * self.block_bytes
         # publish: one header flit + payload per block (DRAM_ST_REQ shape).
         st.flits += n * (1 + protocol.data_flits(self.block_bytes))
+        if self._san is not None:
+            self._san.after(self, "write", idx=idx, pts=int(pts), ts=ts)
         return ts
 
     # -- wraparound guard ---------------------------------------------------
@@ -779,6 +865,8 @@ class LeaseEngine:
             self._rts = np.maximum(self._rts - shift, 0).astype(np.int32)
         self.ts_shift += shift
         self.stats.rebases += 1
+        if self._san is not None:
+            self._san.after(self, "rebase")
         return shift
 
     @staticmethod
@@ -816,4 +904,5 @@ class LeaseEngine:
             "wire_flits": st.flits,
             "wire_bytes": st.wire_bytes,
             "rebases": st.rebases,
+            "sanitize_checks": self.sanitize_checks,
         }

@@ -28,7 +28,6 @@ Approximations (documented in EXPERIMENTS.md):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict
 
 import jax
@@ -99,7 +98,9 @@ def init_state(geom: Geometry, trace: Trace, cfg: Dict[str, jnp.ndarray],
                directory: bool):
     n, s1, w1 = geom.n_cores, geom.l1_sets, geom.l1_ways
     s2, w2 = geom.llc_sets_total, geom.llc_ways
-    zeros = lambda *sh: jnp.zeros(sh, I32)
+    def zeros(*sh):
+        return jnp.zeros(sh, I32)
+
     st = {
         "cfg": cfg,
         # core state
@@ -133,7 +134,9 @@ def init_state(geom: Geometry, trace: Trace, cfg: Dict[str, jnp.ndarray],
     if directory:
         st["sharers"] = jnp.zeros((s2, w2, n), bool)
     if geom.log_size:
-        z = lambda: jnp.zeros((geom.log_size,), I32)
+        def z():
+            return jnp.zeros((geom.log_size,), I32)
+
         st["log"] = {"core": z(), "kind": z(), "addr": z(), "ts": z(),
                      "ver": z(), "n": I32(0)}
     return st
@@ -530,7 +533,9 @@ def _make_step(geom: Geometry, mem_fn):
             n = log["n"]
             w = jnp.clip(n, 0, geom.log_size - 1)
             ok = is_mem & (n < geom.log_size)
-            upd = lambda a, v: a.at[w].set(jnp.where(ok, v, a[w]))
+            def upd(a, v):
+                return a.at[w].set(jnp.where(ok, v, a[w]))
+
             out["log"] = {
                 "core": upd(log["core"], i),
                 "kind": upd(log["kind"], jnp.where(is_store, 1, 0)),

@@ -19,7 +19,7 @@ dry-run / launch machinery.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple, Union
+from typing import Any, Dict, Tuple, Union
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec

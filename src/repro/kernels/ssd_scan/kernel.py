@@ -14,8 +14,6 @@ SSD algorithm maps onto tensor cores (here: the MXU).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -50,7 +48,10 @@ def ssd_intra_chunk(C, B, xdt, cum, *, interpret: bool = False):
     g, q, n = C.shape
     p = xdt.shape[-1]
     grid = (g,)
-    spec = lambda *shape: pl.BlockSpec((1,) + shape, lambda i: (i,) + (0,) * len(shape))
+    def spec(*shape):
+        return pl.BlockSpec((1,) + shape,
+                            lambda i: (i,) + (0,) * len(shape))
+
     return pl.pallas_call(
         _ssd_kernel,
         grid=grid,

@@ -31,8 +31,10 @@ def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 64, interpret: bool = False):
                           (b, nc, chunk, h, n))
     Cc = jnp.broadcast_to(C.reshape(b, nc, chunk, 1, n),
                           (b, nc, chunk, h, n))
-    fold = lambda a: a.transpose(0, 1, 3, 2, 4).reshape(b * nc * h,
-                                                        chunk, a.shape[-1])
+    def fold(a):
+        return a.transpose(0, 1, 3, 2, 4).reshape(b * nc * h, chunk,
+                                                  a.shape[-1])
+
     y_i, S = ssd_intra_chunk(
         fold(Cc), fold(Bc), fold(xdt[..., :, :]),
         cum.transpose(0, 1, 3, 2).reshape(b * nc * h, chunk, 1),

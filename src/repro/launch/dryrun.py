@@ -24,7 +24,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import (ARCHS, SHAPES, SHAPE_BY_NAME, SUBQUADRATIC_FAMILIES,
                        get_arch)

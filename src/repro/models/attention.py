@@ -10,8 +10,6 @@ numerics oracle and the default XLA path.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

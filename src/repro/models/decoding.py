@@ -13,11 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from .attention import attend
 from .layers import rmsnorm, swiglu
 from .moe import moe_apply
 from .ssm import ssm_block
-from .transformer import (Params, _embed, _head, attn_decode,
+from .transformer import (Params, _embed, attn_decode,
                           attn_decode_paged, attn_prefill,
                           attn_prefill_cached, cross_apply, enc_kv_of,
                           logits_fn)
@@ -254,8 +253,8 @@ def decode_step_paged(cfg: ArchConfig, p: Params, pool_rows, page_rows,
     # land in the page together, in the single scatter below
     row_buf = jnp.zeros((b, pool_rows.shape[1]), pool_rows.dtype)
     for spec in pool_layout(cfg):
-        for l in range(spec.n_layers):
-            layer = jax.tree.map(lambda t, l=l: t[l], p[spec.params_key])
+        for li in range(spec.n_layers):
+            layer = jax.tree.map(lambda t, li=li: t[li], p[spec.params_key])
             if not (cfg.family == "moe" and spec.kind == "mlp"):
                 # the dense decode path replicates inside the moe/dense
                 # scan bodies but not in moe's leading dense stack --
@@ -263,7 +262,7 @@ def decode_step_paged(cfg: ArchConfig, p: Params, pool_rows, page_rows,
                 x = replicate(x)
             y, kd, vd = attn_decode_paged(
                 layer["attn"], cfg, x, pool_rows, page_rows, lengths,
-                l * hkd, (spec.n_layers + l) * hkd, pool_off=spec.offset,
+                li * hkd, (spec.n_layers + li) * hkd, pool_off=spec.offset,
                 chunk=chunk, interpret=interpret, use_kernel=use_kernel)
             x = x + y
             xn = rmsnorm(x, layer["mlp_norm"], cfg.norm_eps)
@@ -271,8 +270,8 @@ def decode_step_paged(cfg: ArchConfig, p: Params, pool_rows, page_rows,
                 x = x + moe_apply(layer["moe"], cfg, xn)
             else:
                 x = x + swiglu(layer["mlp"], xn)
-            k_off = spec.offset + l * hkd
-            v_off = spec.offset + (spec.n_layers + l) * hkd
+            k_off = spec.offset + li * hkd
+            v_off = spec.offset + (spec.n_layers + li) * hkd
             row_buf = row_buf.at[:, k_off:k_off + hkd].set(
                 kd.reshape(b, hkd))
             row_buf = row_buf.at[:, v_off:v_off + hkd].set(

@@ -102,12 +102,12 @@ def chunked_xent(hidden, w_head, labels, chunk: int = 512):
 
     @jax.checkpoint
     def body(carry, xs):
-        h, l = xs
+        h, lab = xs
         logits = jnp.einsum("bcd,dv->bcv", h, w_head).astype(jnp.float32)
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(
-            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
-        mask = (l >= 0).astype(jnp.float32)
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        mask = (lab >= 0).astype(jnp.float32)
         loss = jnp.sum((lse - gold) * mask)
         cnt = jnp.sum(mask)
         return (carry[0] + loss, carry[1] + cnt), None

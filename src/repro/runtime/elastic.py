@@ -15,11 +15,10 @@ argument of the paper, applied to the training control plane).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List
+from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.store import Replica, TardisStore
 from ..optim import adamw

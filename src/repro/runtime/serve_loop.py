@@ -223,6 +223,7 @@ class ServingCluster:
                  kv_lease: int = 64, prefix_reuse: bool = True,
                  ts_bits: int = 30, prefix_backend: str = "pallas",
                  n_decode_pages: int = 512, max_pages: int = 32,
+                 sanitize: Optional[bool] = None,
                  **replica_kw):
         self.cfg = cfg
         self.store = TardisStore(lease=lease)
@@ -265,7 +266,8 @@ class ServingCluster:
         self.prefix_engine = LeaseEngine(
             n_blocks, lease=kv_lease, block_bytes=kv_bytes,
             ts_bits=ts_bits, backend=prefix_backend,
-            kv_pools=kv_pools, alloc_reserve=self.n_prefix_blocks)
+            kv_pools=kv_pools, alloc_reserve=self.n_prefix_blocks,
+            sanitize=sanitize)
         if kv_pools:
             for s in self._stacks:
                 # the models' static k/v offsets (pool_layout) and the
@@ -761,7 +763,7 @@ class ServingCluster:
                 jnp.asarray(lengths), jnp.asarray(tokens))
         eng.set_kv_rows(pool, tokens_appended=len(act))
         self.prefix_stats["decode_block_reads"] += int(
-            sum(-(-(int(l) + 1) // bt) for l in lengths))
+            sum(-(-(int(n) + 1) // bt) for n in lengths))
         nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
         if self.trace is not None:
             self.trace.append({
@@ -849,6 +851,7 @@ class ServingCluster:
             "wire_bytes": s.wire_bytes + e.wire_bytes,
             "directory_would_invalidate": s.dir_invalidations,
             "directory_peak_sharers": s.dir_sharer_bits,
+            "sanitize_checks": self.prefix_engine.sanitize_checks,
             "replica_local_hits": sum(r.reader.local_hits
                                       for r in self.replicas),
             # LeaseEngine prefix-KV path

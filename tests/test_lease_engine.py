@@ -564,3 +564,44 @@ def test_multi_pool_rebase_and_page_free_cover_all_stacks(backend):
     assert eng.kv_ok(pages[0]) and eng.kv_ok(pages[1])
     eng.free_pages(pages)
     assert not eng.kv_ok(pages[0]) and not eng.kv_ok(pages[1])
+
+
+@pytest.mark.parametrize("backend", ["pallas", "numpy"])
+def test_free_pages_rejects_double_free_and_foreign_pages(backend):
+    """The allocator raises -- before touching any state -- on double
+    frees, frees of never-allocated pages, out-of-region ids, and
+    duplicate ids inside one call."""
+    eng = LeaseEngine(8, lease=4, backend=backend, alloc_reserve=4)
+    pages = eng.alloc_pages(2)
+    eng.free_pages(pages)
+    with pytest.raises(ValueError, match="already free"):
+        eng.free_pages([pages[0]])            # double free
+    with pytest.raises(ValueError, match="already free"):
+        eng.free_pages([7])                   # in-region, never allocated
+    with pytest.raises(ValueError, match="outside the allocatable region"):
+        eng.free_pages([0])                   # content-addressed region
+    with pytest.raises(ValueError, match="outside the allocatable region"):
+        eng.free_pages([eng.n_blocks])        # past the table
+    p = eng.alloc_pages(1)
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.free_pages([int(p[0])] * 2)
+    # validate-all-first: a rejected batch must not free its valid ids
+    with pytest.raises(ValueError):
+        eng.free_pages([int(p[0]), 0])
+    assert int(p[0]) not in eng._free_pages
+    eng.free_pages(p)                         # still outstanding -> frees
+    assert eng.free_page_count() == eng.n_blocks - eng.alloc_reserve
+
+
+def test_free_pages_double_free_raises_with_sanitizer_attached():
+    """The raising allocator and the sanitizer shadow agree: a legal
+    alloc/free cycle passes every after-op check, the illegal free still
+    raises first."""
+    eng = LeaseEngine(8, lease=4, backend="numpy", alloc_reserve=4,
+                      sanitize=True)
+    pages = eng.alloc_pages(3)
+    eng.free_pages(pages[:2])
+    with pytest.raises(ValueError, match="already free"):
+        eng.free_pages(pages)                 # 2 of 3 already free
+    eng.free_pages(pages[2:])
+    assert eng.sanitize_checks >= 3

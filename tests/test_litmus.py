@@ -74,10 +74,14 @@ class EngineManager:
     windowed gather (the kernels' pool-offset index-map dimension).
     """
 
-    def __init__(self, backend: str, lease: int, pools: bool = False):
+    def __init__(self, backend: str, lease: int, pools: bool = False,
+                 sanitize: bool = False):
+        # sanitize=False defers to the engine's TARDIS_SANITIZE env check,
+        # so the whole litmus matrix runs sanitized under TARDIS_SANITIZE=1
         self.eng = LeaseEngine(N_ADDR, lease=lease, backend=backend,
                                kv_pools=KV_POOLS if pools else None,
-                               kv_dtype=np.float32)
+                               kv_dtype=np.float32,
+                               sanitize=sanitize or None)
 
     def read(self, addr, pts, req):
         r = self.eng.read([addr], pts, req_wts=[req])
@@ -241,20 +245,24 @@ def run_litmus(progs, schedule, make_mgr, decode_reads=0):
 
 
 @pytest.mark.parametrize("shape", sorted(LITMUS))
-@pytest.mark.parametrize("lease,decode_reads,pools",
-                         [(1, 0, False), (4, 0, False), (4, 2, False),
-                          (4, 2, True)])
+@pytest.mark.parametrize("lease,decode_reads,pools,sanitize",
+                         [(1, 0, False, False), (4, 0, False, False),
+                          (4, 2, False, False), (4, 2, True, False),
+                          (4, 2, True, True)])
 def test_litmus_forbidden_outcomes_never_observed(shape, lease,
-                                                  decode_reads, pools):
+                                                  decode_reads, pools,
+                                                  sanitize):
     progs, forbidden = LITMUS[shape]
     backends = {
         # the multi-pool lane runs the same litmus matrix with dual-stack
         # paged payloads riding the engine backends (decode-time re-reads
         # then exercise dual-stack blocks); the scalar oracle has no pool
         # -- payloads never touch protocol state, so all three backends
-        # must still agree bit-for-bit on every outcome and table
-        "kernel": lambda: EngineManager("pallas", lease, pools),
-        "mirror": lambda: EngineManager("numpy", lease, pools),
+        # must still agree bit-for-bit on every outcome and table.  The
+        # ``sanitize`` lane re-runs the pool matrix with the runtime lease
+        # sanitizer asserting after every engine transition.
+        "kernel": lambda: EngineManager("pallas", lease, pools, sanitize),
+        "mirror": lambda: EngineManager("numpy", lease, pools, sanitize),
         "scalar": lambda: ScalarManager(lease),
     }
     for schedule in interleavings(progs):

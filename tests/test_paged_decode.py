@@ -305,3 +305,18 @@ def test_dense_wave_fallback_families_still_serve():
         done, rep = cluster.run(reqs)
         assert all(r.done and len(r.output) == 2 for r in done)
         assert rep["prefix_block_hits"] + rep["prefix_block_misses"] > 0
+
+
+def test_paged_decode_with_sanitizer_enabled():
+    """The full continuous-batching run under TARDIS_SANITIZE semantics:
+    every engine transition is shadow-checked, the stream stays bit-exact
+    against the dense shadow, and the report ledgers the check count."""
+    cfg, _ = _arch("dense")
+    rng = np.random.default_rng(0)
+    cluster = _cluster("dense", n_replicas=1, sanitize=True)
+    reqs = _reqs(rng, cfg, 8)
+    done, rep = cluster.run(reqs)
+    assert all(r.done and len(r.output) == r.max_new for r in done)
+    assert _replay_dense_shadow("dense", cluster, cluster.trace) > 0
+    _check_pool_drained(cluster)
+    assert rep["sanitize_checks"] > 0
