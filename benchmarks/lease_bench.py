@@ -233,6 +233,78 @@ def bench_decode(iters: int, steps: int, batch: int = 4,
             "paged_over_dense": dt_paged / dt_dense}
 
 
+def bench_directory(n_blocks: int, iters: int):
+    """Sharded-directory rows: remote-vs-local lease wave latency (timed,
+    recorded but NOT gated -- wall-clock), messages-per-wave vs shard
+    count, and the cross-host prefix-reuse replay (both deterministic
+    counters, gated: a multicast or per-block chatter regression moves
+    them no matter how noisy the runner is)."""
+    from repro.core import ShardedLeaseDirectory
+
+    from benchmarks.common import row
+
+    # remote vs local lease hit: identical 8-block waves, owner differing.
+    # even gids live on shard 0 (host 0: local), odd gids on shard 1
+    d = ShardedLeaseDirectory(n_blocks, 2, n_hosts=2, lease=64)
+    rng = np.random.default_rng(0)
+    base = rng.choice(n_blocks // 2, 8, replace=False)
+    local = [int(b) * 2 for b in base]
+    remote = [b + 1 for b in local]
+    out = {}
+    for name, bids in (("local", local), ("remote", remote)):
+        pts = int(d.wave(0, 0, read_groups=[bids]).new_pts)   # warm up
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            pts = int(d.wave(0, pts, read_groups=[bids]).new_pts)
+            times.append(time.perf_counter() - t0)
+        out[f"{name}_us"] = min(times) * 1e6
+        row(f"dir_lease_{name}/n{n_blocks}", min(times) * 1e6,
+            f"{len(bids)} blocks, "
+            f"{'1 owner-shard msg pair' if name == 'remote' else 'no msgs'}")
+    out["remote_over_local"] = out["remote_us"] / out["local_us"]
+
+    # one message pair per contacted owner shard, vs shard count
+    out["msgs_per_wave"] = {}
+    for n_shards in (2, 4, 8):
+        ds = ShardedLeaseDirectory(max(n_blocks, 8 * n_shards), n_shards,
+                                   n_hosts=n_shards, lease=64)
+        res = ds.wave(0, 0, read_groups=[list(range(n_shards * 4))])
+        bound = 2 * (n_shards - 1)        # host 0 owns shard 0: it is free
+        out["msgs_per_wave"][f"S{n_shards}"] = {
+            "msgs": res.msgs, "remote_shards": res.shards_contacted,
+            "bound": bound}
+        print(f"# dir_msgs_per_wave/S{n_shards}: {res.msgs} msgs "
+              f"({res.shards_contacted} remote shards, bound {bound})")
+
+    # cross-host prefix reuse: host 0 writes+publishes P prefix pages,
+    # host 1 leases+fetches them all in ONE wave
+    n_prefix = 16
+    dr = ShardedLeaseDirectory(n_blocks, 2, n_hosts=2, lease=64,
+                               kv_pools={"kv": (1, 16)},
+                               kv_dtype=np.float32, block_bytes=64)
+    bids = list(range(n_prefix))
+    res = dr.wave(0, 0, write_bids=bids, tag_writes_with_ts=True)
+    for b in bids:
+        dr.defer_publish(0, b, {"kv": np.zeros((1, 1, 16), np.float32)})
+    dr.flush_deferred(0)
+    msgs_before = dr.stats.msgs
+    res = dr.wave(1, res.new_pts, read_groups=[bids], fetch_bids=bids)
+    reused = len(res.fetched)
+    fetch_msgs = dr.stats.msgs - msgs_before
+    out["reuse"] = {"blocks": n_prefix, "reused": reused,
+                    "fraction": reused / n_prefix,
+                    "fetch_msgs": fetch_msgs,
+                    "msgs_per_reused_block": fetch_msgs / max(reused, 1),
+                    "multicasts": dr.stats.multicasts,
+                    "invalidation_msgs": dr.stats.invalidation_msgs}
+    print(f"# dir_reuse: {reused}/{n_prefix} prefix pages migrated in "
+          f"{fetch_msgs} msgs "
+          f"({out['reuse']['msgs_per_reused_block']:.3f} msgs/block), "
+          f"{dr.stats.multicasts} multicasts")
+    return out
+
+
 # decode rows: JSON key -> the arch whose reduced config is timed ("B4/..."
 # keeps its historical dense key; the moe row pages dual cache stacks)
 DECODE_ROWS = {
@@ -281,6 +353,9 @@ def run_suite(args, sizes, decode_rows):
         # the scheduler's mood
         out["decode"][key] = bench_decode(max(6, args.iters // 2),
                                           args.decode_steps, arch=arch)
+    header("sharded lease directory (remote-vs-local waves, msgs/wave vs "
+           "shard count, cross-host prefix reuse)")
+    out["directory"] = bench_directory(sizes[-1], args.iters)
     for n in sizes:
         k = out["engine"][f"pallas/n{n}"]
         m = out["engine"][f"numpy/n{n}"]
@@ -332,6 +407,21 @@ def tracked_ratios(out):
     for k, d in out.get("decode", {}).items():
         r[f"decode_paged_over_dense/{k}"] = (
             d["paged_over_dense"], False, DECODE_TOLERANCE)
+    # sharded-directory counters: deterministic (message ledgers, not
+    # wall-clock), so any drift past tolerance is a real protocol change.
+    # The remote/local latency ratio is recorded in the JSON but NOT
+    # gated -- it is wall-clock.
+    d = out.get("directory")
+    if d:
+        for sk, v in sorted(d.get("msgs_per_wave", {}).items()):
+            r[f"dir_msgs_per_wave/{sk}"] = (
+                float(v["msgs"]), False, CHECK_TOLERANCE)
+        rs = d.get("reuse")
+        if rs:
+            r["dir_reuse_fraction"] = (rs["fraction"], True,
+                                       CHECK_TOLERANCE)
+            r["dir_msgs_per_reused_block"] = (
+                rs["msgs_per_reused_block"], False, CHECK_TOLERANCE)
     return r
 
 

@@ -61,6 +61,19 @@ python -m repro.launch.serve --arch kimi-k2-1t-a32b --replicas 2 \
 grep -Eq "pool_tokens_appended_dense +[1-9]" /tmp/serve_moe_check.out
 grep -Eq "pool_tokens_appended_moe +[1-9]" /tmp/serve_moe_check.out
 
+# multi-host serving smoke: 2 simulated hosts share one sharded lease
+# directory; the system prompt prefilled on host 0 must serve host 1
+# suffix-only (skipped prefill tokens + migrated pages) with ZERO
+# multicast/invalidation traffic, under the migration sanitizer
+TARDIS_SANITIZE=1 python -m repro.launch.serve --arch tinyllama-1.1b \
+    --hosts 2 --replicas 1 --requests 6 --max-new 2 --prefix-len 16 \
+    --prefix-block 4 --decode-pages 64 --max-pages 16 --max-batch 2 \
+    | tee /tmp/serve_xhost_check.out
+grep -Eq "host1_prefix_prefill_tokens_skipped +[1-9]" /tmp/serve_xhost_check.out
+grep -Eq "host1_xhost_pages_fetched +[1-9]" /tmp/serve_xhost_check.out
+grep -Eq "xhost_multicasts +0" /tmp/serve_xhost_check.out
+grep -Eq "xhost_invalidation_msgs +0" /tmp/serve_xhost_check.out
+
 # bench smoke: every lease_bench path (engine, wave, paged-vs-dense
 # decode) runs end to end so the bench code cannot rot.
 python benchmarks/lease_bench.py --smoke

@@ -100,6 +100,147 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(name.split("_")[1])
 
 
+def _norm_index(idx, shape) -> Tuple[Tuple[int, int], ...]:
+    """An addressable shard's ``.index`` as concrete (start, stop) pairs."""
+    out = []
+    for d, sl in enumerate(idx):
+        a = 0 if sl.start is None else int(sl.start)
+        b = shape[d] if sl.stop is None else int(sl.stop)
+        out.append((a, b))
+    return tuple(out)
+
+
+def save_sharded(ckpt_dir: str, step: int, tree, *, wts: int = 0,
+                 keep: int = 3) -> str:
+    """Write one checkpoint **without gathering**: each leaf is saved as
+    the pieces its NamedSharding already splits it into (one piece per
+    distinct ``addressable_shards`` index -- replicas dedupe), each tagged
+    with its (start, stop) box in the global shape.  A 1T-param tree never
+    materializes on one host; :func:`restore_sharded` reassembles exactly
+    the boxes each target device needs, so a restore onto a *different*
+    mesh shape streams pieces instead of resharding a full copy."""
+    leaves, treedef = _flatten(tree)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    manifest: Dict[str, Any] = {
+        "step": int(step), "wts": int(wts), "sharded": True,
+        "treedef": str(treedef), "n_leaves": len(leaves),
+        "leaves": [], "shards": [],
+    }
+    shard, shard_bytes, shard_id = {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_id
+        if shard:
+            np.savez(os.path.join(tmp, f"shard_{shard_id}.npz"), **shard)
+            manifest["shards"].append(f"shard_{shard_id}.npz")
+            shard, shard_bytes = {}, 0
+            shard_id += 1
+
+    for i, leaf in enumerate(leaves):
+        ashards = getattr(leaf, "addressable_shards", None)
+        shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        pieces, seen = [], set()
+        if ashards:
+            for s in ashards:
+                box = _norm_index(s.index, shape)
+                if box in seen:
+                    continue                    # replicated copy
+                seen.add(box)
+                pieces.append((box, np.asarray(jax.device_get(s.data))))
+        else:
+            box = tuple((0, d) for d in shape)
+            pieces.append((box, np.asarray(jax.device_get(leaf))))
+        entry = {"idx": i, "shape": list(shape),
+                 "dtype": str(pieces[0][1].dtype), "pieces": []}
+        for j, (box, arr) in enumerate(pieces):
+            key = f"leaf_{i}_p{j}"
+            entry["pieces"].append(
+                {"key": key, "shard": shard_id,
+                 "start": [a for a, _ in box], "stop": [b for _, b in box]})
+            shard[key] = arr
+            shard_bytes += arr.nbytes
+            if shard_bytes >= _MAX_SHARD_BYTES:
+                flush()
+        manifest["leaves"].append(entry)
+    flush()
+    json.dump(manifest, open(os.path.join(tmp, "manifest.json"), "w"))
+
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                           # atomic publish
+    _write_latest(ckpt_dir, f"step_{step}")
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _read_box(entry, shards, idx):
+    """Assemble the slice ``idx`` of one leaf from its saved pieces."""
+    shape = tuple(entry["shape"])
+    want = _norm_index(idx, shape)
+    out = np.empty([b - a for a, b in want], entry["dtype"])
+    filled = 0
+    for p in entry["pieces"]:
+        box = list(zip(p["start"], p["stop"]))
+        inter = [(max(a, pa), min(b, pb))
+                 for (a, b), (pa, pb) in zip(want, box)]
+        if any(x >= y for x, y in inter):
+            continue                                # piece outside the box
+        data = shards[p["key"]]
+        src = tuple(slice(x - pa, y - pa)
+                    for (x, y), (pa, _) in zip(inter, box))
+        dst = tuple(slice(x - a, y - a)
+                    for (x, y), (a, _) in zip(inter, want))
+        out[dst] = data[src]
+        filled += int(np.prod([y - x for x, y in inter]))
+    assert filled == out.size, \
+        f"leaf {entry['idx']}: pieces cover {filled}/{out.size} of {want}"
+    return out
+
+
+def restore_sharded(ckpt_dir: str, tree_like, *,
+                    step: Optional[int] = None,
+                    shardings=None) -> Tuple[Any, Dict[str, Any]]:
+    """Restore a :func:`save_sharded` checkpoint piece-by-piece.
+
+    With ``shardings`` (a matching pytree of NamedShardings for the
+    *target* mesh), every leaf is built through
+    ``jax.make_array_from_callback``: each target device asks for exactly
+    its box and the callback stitches it from whichever saved pieces
+    overlap -- no full-size host copy, and the saved mesh shape never has
+    to match the target's (elastic restore).  Without ``shardings``,
+    leaves assemble to full host arrays."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    if not manifest.get("sharded"):
+        raise ValueError(f"{path} was written by save(), not save_sharded()")
+    shards = {}
+    for s in manifest["shards"]:
+        shards.update(np.load(os.path.join(path, s)))
+    leaves_like, treedef = _flatten(tree_like)
+    assert len(leaves_like) == manifest["n_leaves"], \
+        f"tree mismatch: {len(leaves_like)} vs {manifest['n_leaves']}"
+    sh_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                 else [None] * len(leaves_like))
+    out = []
+    for like, sh, entry in zip(leaves_like, sh_leaves, manifest["leaves"]):
+        shape = tuple(entry["shape"])
+        expect = tuple(getattr(like, "shape", shape))
+        assert shape == expect, (entry["idx"], shape, expect)
+        if sh is not None:
+            out.append(jax.make_array_from_callback(
+                shape, sh, lambda idx, e=entry: _read_box(e, shards, idx)))
+        else:
+            full = (slice(None),) * len(shape)
+            out.append(jax.numpy.asarray(_read_box(entry, shards, full)))
+    return jax.tree.unflatten(treedef, out), manifest
+
+
 def restore(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
             shardings=None) -> Tuple[Any, Dict[str, Any]]:
     """Load a checkpoint into the structure of ``tree_like``.

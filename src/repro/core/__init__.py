@@ -15,9 +15,12 @@ Layers:
 """
 from .geometry import Geometry
 from .lease_engine import LeaseEngine, LeaseStats, ReadManyResult, ReadResult
+from .shard_directory import (DirStats, DirWaveResult, FetchedPage,
+                              NumpyTransport, ShardedLeaseDirectory)
 from .simulator import SimConfig, SimResult, simulate
 from .traces import Trace, make_trace, TRACE_GENERATORS
 
-__all__ = ["Geometry", "LeaseEngine", "LeaseStats", "ReadManyResult",
-           "ReadResult", "SimConfig", "SimResult", "simulate", "Trace",
-           "make_trace", "TRACE_GENERATORS"]
+__all__ = ["DirStats", "DirWaveResult", "FetchedPage", "Geometry",
+           "LeaseEngine", "LeaseStats", "NumpyTransport", "ReadManyResult",
+           "ReadResult", "ShardedLeaseDirectory", "SimConfig", "SimResult",
+           "simulate", "Trace", "make_trace", "TRACE_GENERATORS"]

@@ -856,7 +856,19 @@ class LeaseEngine:
             max_ts = int(np.max(self._rts, initial=0))
         if not timestamps.rebase_needed(max_ts, 0, self.ts_bits):
             return 0
-        shift = timestamps.rebase_amount(self.ts_bits)
+        return self.force_rebase(timestamps.rebase_amount(self.ts_bits))
+
+    def force_rebase(self, shift: int) -> int:
+        """Apply a given downward shift unconditionally.
+
+        The sharded directory uses this to keep every shard on ONE
+        timestamp base: when any shard trips its guard, the coordinator
+        applies the same shift to all shards so cross-shard timestamp
+        order survives the rebase.  Returns the shift.
+        """
+        shift = int(shift)
+        if shift <= 0:
+            return 0
         if self.backend == "pallas":
             self._wts = jnp.maximum(self._wts - shift, 0)
             self._rts = jnp.maximum(self._rts - shift, 0)

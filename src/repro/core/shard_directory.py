@@ -1,0 +1,538 @@
+"""ShardedLeaseDirectory: ONE logical lease table + KV pool across N hosts.
+
+The single-host :class:`~repro.core.lease_engine.LeaseEngine` resolves a
+serving wave's lease traffic in one batched dispatch; this module extends
+that batching across the host boundary.  Block ids hash to an **owner
+shard** (``owner(gid) = gid % n_shards``, ``slot(gid) = gid // n_shards``)
+and each shard is a private ``LeaseEngine`` holding its slice of the
+``(wts, rts)`` tables plus the *home* copy of its blocks' KV pool pages.
+Hosts keep private caches of remotely-owned payloads; coherence between
+them is pure Tardis -- leases expire by timestamp comparison, writers jump
+ahead, and **nobody ever sends an invalidation or multicast**.
+
+The unit of communication is the **wave**: a host's lease traffic for one
+scheduling tick -- reads/renewals, tag re-writes, payload fetches, and any
+write-behind publishes it has queued -- is partitioned by owner shard and
+exchanged as AT MOST one request + one response message per contacted
+shard (shards the host itself owns are local and free).  Inside a shard
+the wave applies writes first, then pending publishes, then reads, then
+fetches, so a same-wave re-tag drops a stale queued publish and a fetch
+always rides a fresh read lease.
+
+Payload movement is **timestamp-ordered page migration**: the owner
+returns a ``(wts, rts, version)``-tagged page whose lease was extended by
+the same wave's read, so the borrower installs it under exactly the lease
+it will serve from (and its ``ts_bits`` rebase guard keeps working --
+:meth:`maybe_rebase` applies one uniform shift to every shard so
+cross-shard timestamp order survives).  Writers publish **write-behind**:
+a write re-tags the directory and invalidates the home slot immediately
+(metadata only), while the payload rides a later wave's request message
+(:meth:`defer_publish` / :meth:`flush_deferred`); a publish whose tag or
+version no longer matches the directory is silently dropped -- the content
+is dead, coherence never depended on it.
+
+Traffic is flit-charged (:data:`repro.core.protocol.FLIT_BYTES`) so
+``report()`` gives real cross-host message/byte counts next to the hard
+zeros (``xhost_multicasts``, ``xhost_invalidation_msgs``) that are the
+paper's pitch, and :meth:`broadcast_baseline` prices the counterfactual
+O(sharers) invalidation multicast a conventional directory would have
+sent.  On device the per-shard exchange is the tiled all-to-all in
+:mod:`repro.dist.collectives`; :class:`NumpyTransport` routes every wave's
+per-shard flit counts through the deterministic ``np_all_to_all`` mirror
+so CPU tests exercise the same transpose-of-shards data path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import protocol, timestamps
+from .lease_engine import LeaseEngine
+from ..dist import collectives
+
+
+@dataclasses.dataclass
+class DirStats:
+    """Cross-host ledger.  Local-shard operations charge nothing here."""
+    waves: int = 0
+    req_msgs: int = 0
+    rep_msgs: int = 0
+    flits: int = 0
+    migrations: int = 0          # payload pages moved host-to-host
+    publishes: int = 0           # write-behind payloads installed at home
+    publishes_dropped: int = 0   # stale (re-tagged before the flush landed)
+    multicasts: int = 0          # stays 0: Tardis sends none
+    invalidation_msgs: int = 0   # stays 0: expiry is a timestamp compare
+
+    @property
+    def msgs(self) -> int:
+        return self.req_msgs + self.rep_msgs
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.flits * protocol.FLIT_BYTES
+
+
+@dataclasses.dataclass
+class FetchedPage:
+    """A migrated page: payload + the exact lease/content tags it carries."""
+    gid: int
+    wts: int
+    rts: int
+    tag: int
+    wver: int
+    blocks: Mapping[str, np.ndarray]   # {pool: (1, *pool_shape)}
+
+
+@dataclasses.dataclass
+class DirWaveResult:
+    new_pts: int                         # max over reads + writes
+    group_pts: np.ndarray                # (G,) per-read-group new pts
+    leases: Dict[int, Tuple[int, int]]   # gid -> (wts, rts) post-extension
+    renew_ok: Dict[int, bool]            # requester's cached wts still current
+    expired: Dict[int, bool]             # pts > rts at wave entry
+    write_ts: Dict[int, int]             # gid -> jump-ahead ts from this wave
+    fetched: Dict[int, FetchedPage]      # gid -> migrated page
+    msgs: int                            # cross-host messages this wave
+    shards_contacted: int                # remote owner shards exchanged with
+
+
+class NumpyTransport:
+    """Deterministic host mirror of the device shard exchange.
+
+    Every wave's per-destination-host flit counts are routed through
+    :func:`repro.dist.collectives.np_all_to_all` exactly as the device
+    path would ride ``lax.all_to_all`` over the ``data``/``pod`` axes:
+    only the source host's row block is populated, the transpose lands
+    block ``src`` of destination ``dst`` on host ``dst``, and the
+    round-trip is asserted bit-for-bit before the wave proceeds.
+    """
+
+    def __init__(self, n_hosts: int):
+        self.n_hosts = int(n_hosts)
+        self.routes = 0
+
+    def exchange(self, src: int, sizes: np.ndarray) -> np.ndarray:
+        """Route ``sizes`` ((n_hosts, k) int64, row = payload for that
+        destination host) from host ``src``; returns what ``src`` would
+        see after the response leg (its own row of the transpose)."""
+        n = self.n_hosts
+        sizes = np.asarray(sizes, np.int64).reshape(n, -1)
+        per_host = [np.zeros_like(sizes) for _ in range(n)]
+        per_host[src] = sizes
+        out = collectives.np_all_to_all(per_host)
+        for dst in range(n):
+            got = out[dst].reshape(n, -1)
+            if not np.array_equal(got[src], sizes[dst]):
+                raise AssertionError(
+                    f"transport route {src}->{dst} corrupted: "
+                    f"{got[src]} != {sizes[dst]}")
+            rest = np.delete(got, src, axis=0)
+            if rest.any():
+                raise AssertionError(
+                    f"transport leaked data onto host {dst} from a host "
+                    f"that sent nothing")
+        self.routes += int((sizes != 0).any(axis=1).sum())
+        return out[src].reshape(n, -1)
+
+
+class ShardedLeaseDirectory:
+    """N-shard lease directory over one global block-id space.
+
+    ``n_hosts`` defaults to ``n_shards`` (shard ``s`` lives on host
+    ``s % n_hosts``).  ``backend``/``kv_pools``/``block_bytes`` configure
+    each shard's :class:`LeaseEngine` (home pools are directory-managed:
+    the per-shard free list is empty, slots are addressed by ownership).
+    """
+
+    def __init__(self, n_blocks: int, n_shards: int, *,
+                 n_hosts: Optional[int] = None, lease: int = 64,
+                 backend: str = "numpy", ts_bits: int = 30,
+                 block_bytes: int = 0, interpret: Optional[bool] = None,
+                 kv_pools: Optional[Mapping[str, Sequence[int]]] = None,
+                 kv_dtype=jnp.bfloat16, sanitize: Optional[bool] = None,
+                 transport: Optional[NumpyTransport] = None):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.n_blocks = int(n_blocks)
+        self.n_shards = int(n_shards)
+        self.n_hosts = int(n_hosts) if n_hosts is not None else self.n_shards
+        self.lease = int(lease)
+        self.ts_bits = int(ts_bits)
+        self.block_bytes = int(block_bytes)
+        self.n_slots = -(-self.n_blocks // self.n_shards)
+        self.shards: List[LeaseEngine] = [
+            LeaseEngine(self.n_slots, lease, backend=backend,
+                        ts_bits=ts_bits, block_bytes=block_bytes,
+                        interpret=interpret, kv_pools=kv_pools,
+                        kv_dtype=kv_dtype, alloc_reserve=self.n_slots,
+                        sanitize=sanitize)
+            for _ in range(self.n_shards)]
+        # content truth: directory-global tag + monotone version per block
+        self.tags = np.full(self.n_blocks, -1, np.int64)
+        self.wver = np.zeros(self.n_blocks, np.int64)
+        self.ts_shift = 0
+        self.rebases = 0
+        self.stats = DirStats()
+        self.wave_log: List[dict] = []
+        # write-behind queues: host -> shard -> [(gid, blocks, tag, wver)]
+        self._pending: Dict[int, Dict[int, list]] = {}
+        self.transport = transport if transport is not None else \
+            NumpyTransport(self.n_hosts)
+        if sanitize is None:
+            sanitize = os.environ.get("TARDIS_SANITIZE", "0").lower() \
+                not in ("", "0", "false", "off")
+        self._msan = None
+        if sanitize:
+            from ..analysis.sanitize import MigrationSanitizer
+            self._msan = MigrationSanitizer()
+
+    # -- id space ------------------------------------------------------------
+
+    def owner(self, gid: int) -> int:
+        return int(gid) % self.n_shards
+
+    def slot(self, gid: int) -> int:
+        return int(gid) // self.n_shards
+
+    def shard_host(self, shard: int) -> int:
+        return int(shard) % self.n_hosts
+
+    def gid_of(self, shard: int, slot: int) -> int:
+        return int(slot) * self.n_shards + int(shard)
+
+    @property
+    def wts(self) -> np.ndarray:
+        """Reassembled global wts table (verification view)."""
+        out = np.zeros(self.n_blocks, np.int32)
+        for s, eng in enumerate(self.shards):
+            gids = np.arange(s, self.n_blocks, self.n_shards)
+            out[gids] = eng.wts[:gids.size]
+        return out
+
+    @property
+    def rts(self) -> np.ndarray:
+        out = np.zeros(self.n_blocks, np.int32)
+        for s, eng in enumerate(self.shards):
+            gids = np.arange(s, self.n_blocks, self.n_shards)
+            out[gids] = eng.rts[:gids.size]
+        return out
+
+    def home_ok(self, gid: int) -> bool:
+        """Does the owner shard hold valid home content for ``gid``'s
+        current tag?  (False between a re-tag and its publish flush.)"""
+        return self.shards[self.owner(gid)].kv_ok(self.slot(gid))
+
+    @property
+    def sanitize_checks(self) -> int:
+        eng = sum(e.sanitize_checks for e in self.shards)
+        return eng + (self._msan.checks if self._msan is not None else 0)
+
+    # -- write-behind publishes ---------------------------------------------
+
+    def defer_publish(self, host: int, gid: int, blocks,
+                      tag: Optional[int] = None,
+                      wver: Optional[int] = None) -> None:
+        """Queue ``gid``'s new payload for its home shard; it rides the
+        next wave ``host`` sends (or :meth:`flush_deferred`).  ``tag`` /
+        ``wver`` default to the directory's current values -- the writer
+        publishes the content it just re-tagged."""
+        gid = int(gid)
+        tag = int(self.tags[gid]) if tag is None else int(tag)
+        wver = int(self.wver[gid]) if wver is None else int(wver)
+        if self._msan is not None:
+            self._msan.on_defer(host, gid, tag, wver)
+        shard = self.owner(gid)
+        self._pending.setdefault(int(host), {}).setdefault(
+            shard, []).append((gid, blocks, tag, wver))
+
+    def _apply_pends(self, host: int, shard: int) -> int:
+        """Install this host's queued publishes at ``shard``; returns the
+        number of payload blocks that rode the request message."""
+        pends = self._pending.get(int(host), {}).pop(shard, [])
+        eng = self.shards[shard]
+        for gid, blocks, tag, wver in pends:
+            if self._msan is not None:
+                self._msan.on_flush(host, gid, tag, wver)
+            if self.tags[gid] != tag or self.wver[gid] != wver:
+                self.stats.publishes_dropped += 1   # re-tagged underneath
+                continue
+            eng.write_kv(np.asarray([self.slot(gid)], np.int64), blocks)
+            self.stats.publishes += 1
+        return len(pends)
+
+    def flush_deferred(self, host: Optional[int] = None) -> int:
+        """Drain write-behind queues (end of run / host drain) as
+        publish-only waves: one request message per (host, owner shard)
+        still holding payloads.  Returns the number of flush messages."""
+        hosts = [int(host)] if host is not None else \
+            sorted(self._pending.keys())
+        sent = 0
+        for h in hosts:
+            shards = sorted(self._pending.get(h, {}).keys())
+            if not shards:
+                continue
+            sizes = np.zeros((self.n_hosts, 2), np.int64)
+            log = {"host": h, "kind": "flush", "shards": shards, "msgs": 0,
+                   "flits": 0}
+            for s in shards:
+                n_pend = self._apply_pends(h, s)
+                if self.shard_host(s) == h:
+                    continue                        # local: free
+                req = 1 + n_pend * protocol.data_flits(self.block_bytes)
+                rep = 1                             # bare ack
+                self.stats.req_msgs += 1
+                self.stats.rep_msgs += 1
+                self.stats.flits += req + rep
+                log["msgs"] += 2
+                log["flits"] += req + rep
+                sizes[self.shard_host(s)] += (req, rep)
+                sent += 1
+            if self.transport is not None and sizes.any():
+                self.transport.exchange(h % self.n_hosts, sizes)
+            self.wave_log.append(log)
+        return sent
+
+    # -- the wave ------------------------------------------------------------
+
+    def wave(self, host: int, pts: int, read_groups: Sequence = (),
+             req_wts: Optional[Mapping[int, int]] = None,
+             write_bids: Sequence = (), write_tags: Sequence = (),
+             fetch_bids: Sequence = (),
+             tag_writes_with_ts: bool = False) -> DirWaveResult:
+        """Resolve one host's lease traffic for a tick.
+
+        ``read_groups`` holds per-requester global block-id lists (the
+        serving wave: one group per request).  ``write_bids`` get the
+        jump-ahead plus a directory re-tag to the aligned ``write_tags``
+        (or to the jump-ahead ts itself with ``tag_writes_with_ts`` -- the
+        litmus stores, whose value IS the timestamp).  ``fetch_bids`` ask
+        for page migration; each is implicitly read too, so the page
+        carries the lease this wave just extended.  Pending publishes for
+        every contacted shard ride the request message; shards holding
+        only pends are contacted too (the flush may not wait for organic
+        traffic that -- on a lease hit -- never materializes).
+        """
+        host = int(host)
+        pts = int(pts)
+        groups = [list(dict.fromkeys(int(b) for b in g))
+                  for g in read_groups]
+        write_bids = [int(b) for b in write_bids]
+        fetch_bids = list(dict.fromkeys(int(b) for b in fetch_bids))
+        if not tag_writes_with_ts and len(write_bids) != len(write_tags):
+            raise ValueError("write_tags must align with write_bids")
+        read_union = {b for g in groups for b in g}
+        orphan_fetches = [b for b in fetch_bids if b not in read_union]
+        if orphan_fetches:       # a migrated page always rides a fresh read
+            groups.append(orphan_fetches)
+        n_groups = len(groups)
+
+        by_shard: Dict[int, dict] = {}
+
+        def shard_entry(s: int) -> dict:
+            return by_shard.setdefault(
+                s, {"groups": [[] for _ in range(n_groups)], "writes": [],
+                    "tags": [], "fetches": []})
+
+        for g, bids in enumerate(groups):
+            for b in bids:
+                shard_entry(self.owner(b))["groups"][g].append(b)
+        for i, b in enumerate(write_bids):
+            e = shard_entry(self.owner(b))
+            e["writes"].append(b)
+            if not tag_writes_with_ts:
+                e["tags"].append(int(write_tags[i]))
+        for b in fetch_bids:
+            shard_entry(self.owner(b))["fetches"].append(b)
+        for s in self._pending.get(host, {}):
+            shard_entry(s)
+        contacted = sorted(by_shard)
+
+        leases: Dict[int, Tuple[int, int]] = {}
+        renew_ok: Dict[int, bool] = {}
+        expired: Dict[int, bool] = {}
+        write_ts: Dict[int, int] = {}
+        fetched: Dict[int, FetchedPage] = {}
+        group_pts = np.full(n_groups, pts, np.int64)
+        new_pts = pts
+        sizes = np.zeros((self.n_hosts, 2), np.int64)
+        log = {"host": host, "kind": "wave", "shards": contacted,
+               "remote_shards": 0, "msgs": 0, "flits": 0}
+
+        for s in contacted:
+            e = by_shard[s]
+            eng = self.shards[s]
+            n_ids = (len({b for g in e["groups"] for b in g})
+                     + len(e["writes"]) + len(e["fetches"]))
+
+            # 1) writes: jump-ahead + re-tag; home content is now stale
+            if e["writes"]:
+                slots = np.asarray([self.slot(b) for b in e["writes"]],
+                                   np.int64)
+                ts = eng.write(slots, pts)
+                new_pts = max(new_pts, ts)
+                for i, b in enumerate(e["writes"]):
+                    write_ts[b] = ts
+                    self.tags[b] = ts if tag_writes_with_ts \
+                        else e["tags"][i]
+                    self.wver[b] += 1
+                if eng.has_kv:
+                    eng.invalidate_kv(slots)
+
+            # 2) pending publishes (after writes: a same-wave re-tag
+            #    drops the stale payload instead of installing it)
+            n_pend = self._apply_pends(host, s)
+
+            # 3) reads/renewals: one batched read_many per shard
+            slot_groups = [[self.slot(b) for b in g] for g in e["groups"]]
+            have_reads = any(slot_groups)
+            if have_reads:
+                req = None
+                if req_wts:
+                    req = {self.slot(b): w for b, w in req_wts.items()
+                           if self.owner(b) == s and w is not None}
+                rm = eng.read_many(slot_groups, pts, req_wts=req or None)
+                gids = np.asarray(
+                    [self.gid_of(s, sl) for sl in rm.union_idx], np.int64)
+                for j, b in enumerate(gids):
+                    b = int(b)
+                    leases[b] = (int(rm.wts[j]), int(rm.rts[j]))
+                    renew_ok[b] = bool(rm.renew_ok[:, j].any())
+                    expired[b] = bool(rm.expired[:, j].any())
+                for g in range(n_groups):
+                    group_pts[g] = max(group_pts[g], int(rm.new_pts[g]))
+                    new_pts = max(new_pts, int(rm.new_pts[g]))
+
+            # 4) fetches: migrate home pages under the lease just taken
+            for b in e["fetches"]:
+                sl = self.slot(b)
+                if not eng.kv_ok(sl):
+                    continue                      # no home copy: repair
+                blocks = eng.read_kv(np.asarray([sl], np.int64))
+                if not isinstance(blocks, Mapping):
+                    blocks = {eng._single_pool(): blocks}
+                w, r = leases[b]
+                fetched[b] = FetchedPage(
+                    gid=b, wts=w, rts=r, tag=int(self.tags[b]),
+                    wver=int(self.wver[b]),
+                    blocks={k: np.asarray(v) for k, v in blocks.items()})
+                self.stats.migrations += 1
+
+            # 5) charge the exchange (remote shards only)
+            if self.shard_host(s) == host:
+                continue
+            n_read = sum(len(set(g)) for g in slot_groups if g) \
+                if have_reads else 0
+            n_fetch = sum(1 for b in e["fetches"] if b in fetched)
+            req_flits = (1 + protocol.data_flits(4 * n_ids + 8)
+                         + n_pend * protocol.data_flits(self.block_bytes))
+            rep_flits = (1 + protocol.data_flits(8 * n_read + 8)
+                         + n_fetch
+                         * (1 + protocol.data_flits(self.block_bytes)))
+            self.stats.req_msgs += 1
+            self.stats.rep_msgs += 1
+            self.stats.flits += req_flits + rep_flits
+            sizes[self.shard_host(s)] += (req_flits, rep_flits)
+            log["remote_shards"] += 1
+            log["msgs"] += 2
+            log["flits"] += req_flits + rep_flits
+
+        if self._msan is not None:
+            for b, page in fetched.items():
+                self._msan.check_carried(page, leases[b],
+                                         int(self.tags[b]))
+        if self.transport is not None and sizes.any():
+            self.transport.exchange(host % self.n_hosts, sizes)
+        self.stats.waves += 1
+        self.wave_log.append(log)
+        return DirWaveResult(
+            new_pts=new_pts, group_pts=group_pts[:len(read_groups)]
+            if len(read_groups) else group_pts,
+            leases=leases, renew_ok=renew_ok, expired=expired,
+            write_ts=write_ts, fetched=fetched, msgs=log["msgs"],
+            shards_contacted=log["remote_shards"])
+
+    def publish_barrier(self) -> None:
+        """A weight publish swept the fleet: every home payload was
+        computed under the OLD weights.  Invalidate every home slot (a
+        manager-side bitmap clear per shard -- zero messages, tags and
+        lease metadata stay) and bump every content version so queued
+        write-behind publishes of old-weight payloads drop at flush."""
+        for eng in self.shards:
+            if eng.has_kv:
+                eng.invalidate_kv(np.arange(eng.n_blocks))
+        self.wver += 1
+
+    # -- wraparound guard ----------------------------------------------------
+
+    def maybe_rebase(self) -> int:
+        """One uniform shift for every shard: cross-shard timestamp order
+        is protocol state, so shards never rebase independently."""
+        max_ts = max((int(np.max(e.rts, initial=0)) for e in self.shards),
+                     default=0)
+        if not timestamps.rebase_needed(max_ts, 0, self.ts_bits):
+            return 0
+        shift = timestamps.rebase_amount(self.ts_bits)
+        for eng in self.shards:
+            eng.force_rebase(shift)
+        self.ts_shift += shift
+        self.rebases += 1
+        return shift
+
+    # -- reporting -----------------------------------------------------------
+
+    def max_msgs_per_wave(self) -> int:
+        return max((w["msgs"] for w in self.wave_log), default=0)
+
+    def report(self) -> dict:
+        st = self.stats
+        waves = [w for w in self.wave_log if w["kind"] == "wave"]
+        return {
+            "xhost_shards": self.n_shards,
+            "xhost_hosts": self.n_hosts,
+            "xhost_waves": st.waves,
+            "xhost_msgs": st.msgs,
+            "xhost_req_msgs": st.req_msgs,
+            "xhost_rep_msgs": st.rep_msgs,
+            "xhost_flits": st.flits,
+            "xhost_bytes": st.wire_bytes,
+            "xhost_migrations": st.migrations,
+            "xhost_publishes": st.publishes,
+            "xhost_publishes_dropped": st.publishes_dropped,
+            "xhost_multicasts": st.multicasts,
+            "xhost_invalidation_msgs": st.invalidation_msgs,
+            "xhost_max_msgs_per_wave": self.max_msgs_per_wave(),
+            "xhost_max_shards_per_wave": max(
+                (w["remote_shards"] for w in waves), default=0),
+            "xhost_transport_routes": (self.transport.routes
+                                       if self.transport else 0),
+            "xhost_rebases": self.rebases,
+            "xhost_sanitize_checks": self.sanitize_checks,
+        }
+
+    def broadcast_baseline(self, n_hosts: Optional[int] = None) -> dict:
+        """Counterfactual: a conventional full-map directory multicasting
+        INV to every sharer on each write and collecting INV_ACKs.  Every
+        re-tag in this run would have been an O(sharers) fan-out; price it
+        with every other host a sharer (the shared-prefix serving case --
+        that is the point of sharing)."""
+        n_hosts = self.n_hosts if n_hosts is None else int(n_hosts)
+        writes = sum(e.stats.writes for e in self.shards)
+        sharers = max(0, n_hosts - 1)
+        inv = writes * sharers
+        flits = inv * (protocol.MESSAGE_FLITS["INV"]
+                       + protocol.MESSAGE_FLITS["INV_ACK"])
+        return {
+            "hosts": n_hosts,
+            "writes": writes,
+            "bcast_inv_msgs": inv * 2,           # INV out + INV_ACK back
+            "bcast_inv_flits": flits,
+            "bcast_inv_bytes": flits * protocol.FLIT_BYTES,
+            "tardis_inv_msgs": 0,
+            "tardis_msgs": self.stats.msgs,
+            "tardis_flits": self.stats.flits,
+        }

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec
 
-from .sharding import _dp_axes
+from .sharding import activation_spec
 
 
 def ambient_mesh():
@@ -40,22 +40,22 @@ def ambient_mesh():
 
 
 def batch_activations(x):
-    """Constrain an activation's leading (batch) dim to the DP axes.
+    """Constrain an activation to batch-over-DP plus sequence-over-model.
 
-    Re-anchors the residual stream to batch-over-DP so feature shardings
-    introduced by TP weights don't propagate layer to layer.  No-op without
-    an ambient mesh or when the batch dim doesn't divide the DP axes.
+    Re-anchors the residual stream so feature shardings introduced by TP
+    weights don't propagate layer to layer, and parks a 3-D+ activation's
+    sequence dim on the otherwise-idle ``model`` axis (sequence
+    parallelism -- see :func:`repro.dist.sharding.activation_spec`).
+    No-op without an ambient mesh or when no dim divides its axes.
     """
     mesh = ambient_mesh()
     if mesh is None or x.ndim == 0:
         return x
-    dp = _dp_axes(mesh, x.shape[0])
-    if dp is None:
+    spec = activation_spec(mesh, x.shape)
+    if all(ax is None for ax in spec):
         return x
-    spec = [None] * x.ndim
-    spec[0] = dp
     return jax.lax.with_sharding_constraint(
-        x, NamedSharding(mesh, PartitionSpec(*spec)))
+        x, NamedSharding(mesh, spec))
 
 
 def replicate(x):

@@ -10,13 +10,21 @@ is on (4x fewer bytes than fp32 all-reduce).
 ``microbatch_grads`` accumulates gradients over ``n_micro`` equal slices of
 the batch with ``lax.scan`` (O(1) HLO in the microbatch count), matching the
 full-batch gradient of the mean loss exactly for equal slice sizes.
+
+The device collectives (``psum`` / ``all_gather`` / ``reduce_scatter`` /
+``all_to_all``) are thin named-axis wrappers for use inside ``shard_map``
+over the ``data``/``pod`` mesh axes; the ``np_*`` functions are their
+deterministic host mirrors over a list of per-device arrays, so transport
+code (the sharded lease directory's per-wave shard exchange) can be tested
+bit-for-bit on CPU without a multi-device runtime.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Tree = Any
 
@@ -94,3 +102,75 @@ def microbatch_grads(loss_fn: Callable[[Tree, Tree], jnp.ndarray],
     grads = jax.tree.map(
         lambda g, p: (g * inv).astype(p.dtype), grad_sum, params)
     return loss_sum * inv, grads
+
+
+# ---------------------------------------------------------------------------
+# Named-axis device collectives (shard_map bodies over the data/pod axes)
+# ---------------------------------------------------------------------------
+
+def psum(x, axis):
+    """All-reduce-sum over the named mesh axis (or tuple of axes)."""
+    return jax.lax.psum(x, axis)
+
+
+def all_gather(x, axis):
+    """Concatenate every device's shard along dim 0 (tiled all-gather)."""
+    return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+
+
+def reduce_scatter(x, axis):
+    """Sum across the axis, then split the result along dim 0.
+
+    Device ``i`` keeps rows ``[i*n/N, (i+1)*n/N)`` of the sum -- the
+    standard reduce-scatter building block of a bandwidth-optimal
+    all-reduce (all-gather of the scattered sums completes it).
+    """
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+
+
+def all_to_all(x, axis):
+    """Transpose shards across the axis: row block j of device i lands on
+    device j as row block i.  This is the one-message-per-peer exchange the
+    sharded lease directory rides."""
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic numpy mirrors: lists of per-device arrays in, same out.
+# Shapes/semantics match the tiled device ops above exactly.
+# ---------------------------------------------------------------------------
+
+def np_psum(shards: Sequence[np.ndarray]) -> List[np.ndarray]:
+    total = np.sum(np.stack([np.asarray(s) for s in shards]), axis=0)
+    return [total.copy() for _ in shards]
+
+
+def np_all_gather(shards: Sequence[np.ndarray]) -> List[np.ndarray]:
+    full = np.concatenate([np.asarray(s) for s in shards], axis=0)
+    return [full.copy() for _ in shards]
+
+
+def np_reduce_scatter(shards: Sequence[np.ndarray]) -> List[np.ndarray]:
+    n = len(shards)
+    total = np.sum(np.stack([np.asarray(s) for s in shards]), axis=0)
+    if total.shape[0] % n:
+        raise ValueError(
+            f"reduce_scatter dim 0 ({total.shape[0]}) not divisible by "
+            f"device count {n}")
+    return [p.copy() for p in np.split(total, n, axis=0)]
+
+
+def np_all_to_all(shards: Sequence[np.ndarray]) -> List[np.ndarray]:
+    n = len(shards)
+    pieces = []
+    for s in shards:
+        s = np.asarray(s)
+        if s.shape[0] % n:
+            raise ValueError(
+                f"all_to_all dim 0 ({s.shape[0]}) not divisible by "
+                f"device count {n}")
+        pieces.append(np.split(s, n, axis=0))
+    # device j receives piece j of every device, in device order
+    return [np.concatenate([pieces[i][j] for i in range(n)], axis=0)
+            for j in range(n)]

@@ -116,6 +116,24 @@ def batch_spec(mesh, shape) -> PartitionSpec:
     return PartitionSpec(*spec)
 
 
+def activation_spec(mesh, shape) -> PartitionSpec:
+    """Residual-stream placement: batch over the DP axes plus **sequence
+    parallelism** -- a 3-D+ activation's second (sequence) dim shards over
+    ``model`` when divisible.  Between TP regions the model axis is idle,
+    so parking the sequence dim there cuts per-device activation memory by
+    the TP degree (norms and element-wise ops are position-local); the TP
+    matmuls' own all-gather re-materializes the full sequence exactly where
+    it is needed.  Divisibility-guarded like every other placement: an
+    indivisible sequence dim replicates."""
+    if len(shape) == 0:
+        return PartitionSpec()
+    spec = [None] * len(shape)
+    spec[0] = _dp_axes(mesh, shape[0])
+    if len(shape) >= 3:
+        spec[1] = _model_axis(mesh, shape[1])
+    return PartitionSpec(*spec)
+
+
 def batch_shardings(mesh, batch) -> Any:
     """Shard every batch leaf's leading (batch) dim over the DP axes."""
     return jax.tree.map(

@@ -3,6 +3,12 @@
 Starts a Tardis-coherent replica cluster on the selected architecture's
 reduced config and serves synthetic batched requests (the full configs are
 exercised by the multi-pod dry-run; see repro.launch.dryrun).
+
+``--hosts K`` serves through K simulated hosts sharing one sharded lease
+directory: the request stream is served in two phases (host 0 first, then
+round-robin over the others) so the later hosts demonstrably reuse the
+prefix pages host 0 prefilled -- the report grows per-host breakouts and
+the directory's cross-host message ledger (``xhost_*``).
 """
 import argparse
 
@@ -12,7 +18,7 @@ import numpy as np
 
 from ..configs import ARCHS, get_arch, reduced
 from ..models import init_params
-from ..runtime import Request, ServingCluster
+from ..runtime import MultiHostServingCluster, Request, ServingCluster
 
 
 def main():
@@ -31,6 +37,11 @@ def main():
                     help="page-table length per request")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="continuous-batch slots per replica")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help=">1: simulated hosts sharing a sharded lease "
+                         "directory (cross-host prefix-KV migration)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="owner shards for --hosts mode (default: --hosts)")
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
@@ -38,32 +49,52 @@ def main():
         raise SystemExit("serve CLI drives decoder-only archs; whisper is "
                          "exercised via tests/dry-run (needs frame inputs)")
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    cluster = ServingCluster(cfg, lambda: params, n_replicas=args.replicas,
-                             lease=args.lease,
-                             prefix_block_tokens=args.prefix_block,
-                             kv_lease=16, cache_len=96,
-                             n_decode_pages=args.decode_pages,
-                             max_pages=args.max_pages,
-                             selfinc_period=4, max_batch=args.max_batch)
+    kw = dict(n_replicas=args.replicas, lease=args.lease,
+              prefix_block_tokens=args.prefix_block,
+              kv_lease=16, cache_len=96,
+              n_decode_pages=args.decode_pages,
+              max_pages=args.max_pages,
+              selfinc_period=4, max_batch=args.max_batch)
     rng = np.random.default_rng(0)
     system = rng.integers(1, cfg.vocab, args.prefix_len).astype(np.int32)
     reqs = [Request(i, np.concatenate(
                 [system, rng.integers(1, cfg.vocab, rng.integers(4, 16))
                  .astype(np.int32)]), max_new=args.max_new)
             for i in range(args.requests)]
-    done, report = cluster.run(reqs)
-    print(f"served {len(done)} requests on {args.replicas} replicas "
-          f"({args.arch} reduced)")
+    if args.hosts > 1:
+        cluster = MultiHostServingCluster(
+            cfg, lambda: params, n_hosts=args.hosts,
+            n_shards=args.shards or None, **kw)
+        # phase 1: host 0 prefills + publishes the shared prefix; phase 2:
+        # the other hosts serve the same system prompt suffix-only
+        n0 = max(1, len(reqs) // args.hosts)
+        cluster.run(reqs[:n0], affinity=[0] * n0)
+        done, report = cluster.run(
+            reqs[n0:],
+            affinity=[1 + i % (args.hosts - 1)
+                      for i in range(len(reqs) - n0)])
+        done = reqs
+    else:
+        cluster = ServingCluster(cfg, lambda: params, **kw)
+        done, report = cluster.run(reqs)
+    print(f"served {len(done)} requests on {args.replicas} replicas x "
+          f"{args.hosts} host(s) ({args.arch} reduced)")
     for k, v in report.items():
         print(f"  {k:28s} {v}")
     if report["prefix_prefill_tokens_skipped"]:
         print(f"paged-KV pool: prefill skipped "
               f"{report['prefix_prefill_tokens_skipped']} prompt tokens, "
               f"{report['prefix_flops_saved']/1e9:.2f} GFLOPs saved")
-    if cluster.paged:
+    if getattr(cluster, "paged", True):      # multi-host is always paged
         print(f"paged decode: {report['kv_tokens_appended']} token rows "
               f"through pool pages, peak {report['pool_page_peak']} pages "
               f"in use, {report['pool_pages_freed']} freed")
+    if args.hosts > 1:
+        print(f"sharded directory: {report['xhost_msgs']} cross-host msgs "
+              f"({report['xhost_bytes']} bytes), "
+              f"{report['xhost_migrations']} pages migrated, "
+              f"{report['xhost_multicasts']} multicasts, "
+              f"{report['xhost_invalidation_msgs']} invalidation msgs")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 from .train_loop import TrainConfig, train
-from .serve_loop import DecodeReplica, Request, ServingCluster
+from .serve_loop import (DecodeReplica, MultiHostServingCluster, Request,
+                         ServingCluster)
 from .elastic import ElasticTrainer, ElasticReport
 
-__all__ = ["TrainConfig", "train", "DecodeReplica", "Request",
-           "ServingCluster", "ElasticTrainer", "ElasticReport"]
+__all__ = ["TrainConfig", "train", "DecodeReplica", "MultiHostServingCluster",
+           "Request", "ServingCluster", "ElasticTrainer", "ElasticReport"]

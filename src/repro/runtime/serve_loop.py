@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.lease_engine import LeaseEngine
+from ..core.shard_directory import ShardedLeaseDirectory
 from ..core.store import Replica, TardisStore
 from ..models import (PAGED_FAMILIES, decode_step, decode_step_paged,
                       pool_layout, prefill, prefill_suffix)
@@ -298,7 +299,15 @@ class ServingCluster:
             "decode_block_reads": 0,
             "pinned_relocations": 0, "paged_mid_batch_admissions": 0,
             "paged_admission_deferrals": 0, "pool_page_peak": 0,
+            "xhost_pages_fetched": 0, "xhost_pages_published": 0,
         }
+        # multi-host mode: when a ShardedLeaseDirectory is attached, the
+        # directory shards own the prefix region's (wts, rts) tables and
+        # home payloads; the local engine keeps only this host's payload
+        # cache + decode pages.  Single-host behavior is byte-identical.
+        self.directory = None
+        self.host_id = 0
+        self._migrated: set = set()       # bids installed by page migration
         self.paged = self.prefix_engine.has_kv
         if self.paged:
             interp = self.prefix_engine.interpret
@@ -321,6 +330,27 @@ class ServingCluster:
                     n, last_idx=li),
                 static_argnums=(3, 4))
 
+    def attach_directory(self, directory, host_id: int) -> None:
+        """Join a sharded lease directory as host ``host_id``.
+
+        The directory must cover exactly this cluster's prefix region with
+        the same pool layout; from here on every prefix lease transition
+        (classification, renewal, miss write, decode renewal) goes through
+        :meth:`ShardedLeaseDirectory.wave` -- at most one message per owner
+        shard per wave -- instead of the local engine's tables.
+        """
+        if not self.paged:
+            raise ValueError("multi-host serving requires a paged family")
+        eng = self.prefix_engine
+        if directory.n_blocks != self.n_prefix_blocks:
+            raise ValueError(
+                f"directory covers {directory.n_blocks} blocks, host has "
+                f"{self.n_prefix_blocks} prefix blocks")
+        if directory.block_bytes != eng.block_bytes:
+            raise ValueError("directory/host block_bytes mismatch")
+        self.directory = directory
+        self.host_id = int(host_id)
+
     def publish_weights(self, params) -> int:
         """Hot-swap: no invalidation broadcast; replicas renew on expiry.
 
@@ -337,6 +367,12 @@ class ServingCluster:
         if self.prefix_engine.has_kv:
             self.prefix_engine.invalidate_kv(
                 np.arange(self.prefix_engine.n_blocks))
+        if self.directory is not None:
+            msan = self.directory._msan
+            if msan is not None:
+                for bid in self._migrated:
+                    msan.on_invalidate(self.host_id, bid)
+            self._migrated.clear()
         return self.publisher.pts
 
     # -- prefix-KV content addressing ---------------------------------------
@@ -381,6 +417,10 @@ class ServingCluster:
             self.prefix_stats["pinned_relocations"] += 1
         if self.prefix_engine.has_kv:
             self.prefix_engine.invalidate_kv([bid])
+        if self.directory is not None and bid in self._migrated:
+            self._migrated.discard(bid)
+            if self.directory._msan is not None:
+                self.directory._msan.on_invalidate(self.host_id, bid)
         return True
 
     def _lease_prefix(self, rep: DecodeReplica, prompt: np.ndarray) -> None:
@@ -400,6 +440,8 @@ class ServingCluster:
         prompt collapse to 1 read + <=1 write instead of N full-table
         dispatch pairs.  No invalidation reaches other replicas.
         """
+        if self.directory is not None:
+            return self._lease_prefix_wave_dir(rep, prompts)
         rep.kv_pts += 1
         ps = self.prefix_stats
         bt = self.prefix_block_tokens
@@ -481,7 +523,138 @@ class ServingCluster:
                           if b not in miss_writers}
         return WavePlan(groups, covered, miss_writers, repair_writers)
 
+    def _lease_prefix_wave_dir(self, rep: DecodeReplica,
+                               prompts: List[np.ndarray]) -> WavePlan:
+        """Directory-mode prefix leasing: same wave protocol, but the
+        (wts, rts) truth for the prefix region lives in the sharded
+        directory, so classification runs against the directory's content
+        tags and ALL lease traffic -- renewals, miss re-tags, and payload
+        fetches of remotely-prefilled blocks -- resolves in ONE
+        :meth:`ShardedLeaseDirectory.wave` call (at most one message per
+        owner shard).  A block whose payload another host published serves
+        this wave by timestamp-ordered page migration instead of being
+        recomputed: it counts as covered, and `_install_fetched` lands it
+        in the local pool before the admission prefill reads it.
+        """
+        dirx = self.directory
+        eng = self.prefix_engine
+        rep.kv_pts += 1
+        ps = self.prefix_stats
+        bt = self.prefix_block_tokens
+        groups, tags_by_req = [], []
+        for prompt in prompts:
+            bids, tags = self._prefix_blocks_of(prompt)
+            groups.append(bids)
+            tags_by_req.append(tags)
+
+        local_wts: List[int] = []
+        renew_groups: List[List[int]] = [[] for _ in prompts]
+        renew_req: Dict[int, int] = {}
+        write_bids: List[int] = []
+        write_tags: List[int] = []
+        fetch_bids: List[int] = []
+        miss_writers: Dict[int, Tuple[int, int]] = {}
+        repair_writers: Dict[int, Tuple[int, int]] = {}
+        pending_tags: Dict[int, int] = {}    # re-tags queued for this wave
+        covered: List[int] = []
+        for ri, (prompt, bids, tags) in enumerate(
+                zip(prompts, groups, tags_by_req)):
+            run_ok = True                    # still in the leading run
+            c_cov = 0
+            for c, (bid, tag) in enumerate(zip(bids, tags)):
+                eff_tag = pending_tags.get(bid, int(dirx.tags[bid]))
+                if eff_tag == tag:
+                    ps["prefix_block_hits"] += 1
+                    ps["prefix_tokens_reused"] += bt
+                    will_cover = (self._tags[bid] == tag
+                                  and eng.kv_ok(bid))
+                    if not will_cover:
+                        if (run_ok and bid not in pending_tags
+                                and dirx.home_ok(bid)):
+                            # another host prefilled it: migrate the page
+                            if bid not in fetch_bids:
+                                fetch_bids.append(bid)
+                            will_cover = True
+                        elif (bid not in repair_writers
+                              and bid not in miss_writers
+                              and bid not in fetch_bids):
+                            repair_writers[bid] = (ri, c)
+                    ent = rep.kv_leases.get(bid)
+                    cached_ok = ent is not None and ent[2] == tag
+                    if cached_ok and rep.kv_pts <= ent[1]:
+                        ps["prefix_local_hits"] += 1
+                        local_wts.append(ent[0])
+                    else:
+                        renew_groups[ri].append(bid)
+                        if bid not in renew_req:
+                            renew_req[bid] = ent[0] if cached_ok else -1
+                    if run_ok and will_cover:
+                        c_cov += 1
+                    else:
+                        run_ok = False
+                else:
+                    if eff_tag != -1 or self._tags[bid] != -1:
+                        if not self._evict_block(bid):
+                            ps["prefix_evictions_deferred"] += 1
+                            run_ok = False
+                            continue
+                        ps["prefix_evictions"] += 1
+                    ps["prefix_block_misses"] += 1
+                    self._tags[bid] = tag
+                    pending_tags[bid] = tag
+                    write_bids.append(bid)
+                    write_tags.append(tag)
+                    miss_writers[bid] = (ri, c)
+                    run_ok = False
+            covered.append(min(c_cov, (len(prompt) - 1) // bt))
+        if local_wts:                                  # Table II local hits
+            rep.kv_pts = max(rep.kv_pts, max(local_wts))
+        active = [g for g in renew_groups if g]
+        if active or write_bids or fetch_bids or \
+                self.host_id in dirx._pending:
+            res = dirx.wave(self.host_id, rep.kv_pts, read_groups=active,
+                            req_wts=renew_req or None,
+                            write_bids=write_bids, write_tags=write_tags,
+                            fetch_bids=fetch_bids)
+            rep.kv_pts = int(res.new_pts)
+            ps["prefix_renewals"] += sum(
+                1 for w in renew_req.values() if w >= 0)
+            for bid, (w, r) in res.leases.items():
+                rep.kv_leases[bid] = (w, r, int(dirx.tags[bid]))
+            for bid in miss_writers:
+                ts = res.write_ts.get(bid)
+                if ts is not None:
+                    rep.kv_leases[bid] = (ts, ts, int(self._tags[bid]))
+            self._install_fetched(res, rep)
+        repair_writers = {b: rc for b, rc in repair_writers.items()
+                          if b not in miss_writers}
+        return WavePlan(groups, covered, miss_writers, repair_writers)
+
+    def _install_fetched(self, res, rep: DecodeReplica) -> None:
+        """Land migrated pages in the local pool under exactly the carried
+        ``(wts, rts, version)``: the lease the wave's read extended becomes
+        the local cached lease, the content tag carries over, and the slot
+        joins the host's payload cache (evicting-relocating any pinned
+        different-content local copy first)."""
+        eng = self.prefix_engine
+        dirx = self.directory
+        wver = rep.reader.cached_version("params")
+        for bid, page in res.fetched.items():
+            if self._tags[bid] not in (-1, page.tag):
+                if not self._evict_block(bid):
+                    continue     # pinned + no free page: skip the install
+            eng.write_kv([bid], dict(page.blocks))
+            self._tags[bid] = page.tag
+            self._pool_wver[bid] = -1 if wver is None else int(wver)
+            rep.kv_leases[bid] = (page.wts, page.rts, page.tag)
+            self._migrated.add(bid)
+            self.prefix_stats["xhost_pages_fetched"] += 1
+            if dirx._msan is not None:
+                dirx._msan.mark_installed(self.host_id, bid, page.tag)
+
     def _maybe_rebase(self) -> None:
+        if self.directory is not None:
+            return        # the multi-host coordinator drives rebases
         shift = self.prefix_engine.maybe_rebase()
         if shift:
             for rep in self.replicas:
@@ -582,11 +755,12 @@ class ServingCluster:
         # the joiners' pages are promised: a relocation triggered by this
         # very plan's evictions may not starve their allocation
         self._admit_reserved = sum(self._pages_needed(j) for j in joiners)
-        plan = self._lease_prefix_wave(rep, [j.prompt for j in joiners])
         # weight lease first: reuse only KV computed under the SAME weight
-        # version this admission's prefill will use
+        # version this admission's prefill will use (and, in directory
+        # mode, the version a migrated page installs under)
         params = rep.params()
         wver = rep.reader.cached_version("params")
+        plan = self._lease_prefix_wave(rep, [j.prompt for j in joiners])
         mat_cache: Dict[Tuple[int, ...], Tuple] = {}
         for ji, req in enumerate(joiners):
             self._admit_reserved -= self._pages_needed(req)
@@ -632,6 +806,12 @@ class ServingCluster:
         last = jnp.int32(len(suffix) - 1)
         if skip:
             key = tuple(bids[:covered])
+            if self.directory is not None and self.directory._msan is not None:
+                for bid in key:
+                    if bid in self._migrated:   # serving a migrated page:
+                        self.directory._msan.on_use(     # tag must still
+                            self.host_id, bid,           # be current
+                            int(self.directory.tags[bid]))
             if key not in mat_cache:
                 mat_cache[key] = self._pool_to_stack_kv(
                     self._read_kv_stacks(list(key)))
@@ -656,6 +836,19 @@ class ServingCluster:
             eng.write_kv([bid for bid, _ in wb], blocks)
             self._pool_wver[[bid for bid, _ in wb]] = \
                 -1 if wver is None else int(wver)
+            if self.directory is not None:
+                # write-behind home publish: the payload rides the NEXT
+                # wave's request message to the owner shard (no extra
+                # message); a stale publish (re-tagged first) is dropped
+                # owner-side by version
+                for i_wb, (bid, _c) in enumerate(wb):
+                    if self.directory.tags[bid] != self._tags[bid]:
+                        continue
+                    self.directory.defer_publish(
+                        self.host_id, bid,
+                        {p: np.asarray(a[i_wb:i_wb + 1])
+                         for p, a in blocks.items()})
+                    ps["xhost_pages_published"] += 1
         # page table: covered shared blocks (pinned + leased for the whole
         # decode) then privately allocated pages for suffix + decode KV
         total_pages = -(-(plen + req.max_new) // bt)
@@ -719,6 +912,8 @@ class ServingCluster:
         stream reads its pinned blocks; expired leases renew data-less in
         ONE batched dispatch (the renewal-dominated pattern lease tuning
         optimizes).  Unexpired leases are local hits -- no messages."""
+        if self.directory is not None:
+            return self._renew_decode_leases_dir(rep, act)
         expired: Dict[int, int] = {}
         for s in act:
             for bid in s.shared_bids:
@@ -742,6 +937,42 @@ class ServingCluster:
             rep.kv_leases[bid] = (int(res.wts[i]), int(res.rts[i]),
                                   int(self._tags[bid]))
         self.prefix_stats["decode_renewals"] += len(expired)
+
+    def _renew_decode_leases_dir(self, rep: DecodeReplica,
+                                 act: List[Stream]) -> None:
+        """Directory-mode decode renewals: the same renewal-dominated
+        pattern, one :meth:`ShardedLeaseDirectory.wave` for every expired
+        lease (<=1 message per owner shard, data-less when the cached
+        version matches).  A renewal that comes back with a NEWER version
+        means another host re-tagged the block underneath this decode: the
+        local copy keeps serving its bits as a frozen private copy (the
+        same-version staleness rule relocation implements locally), so the
+        cached lease is dropped rather than refreshed."""
+        dirx = self.directory
+        ps = self.prefix_stats
+        expired: Dict[int, int] = {}
+        for s in act:
+            for bid in s.shared_bids:
+                ent = rep.kv_leases.get(bid)
+                if ent is None or ent[2] != int(dirx.tags[bid]):
+                    continue          # re-tagged/migrated: private copy
+                if rep.kv_pts <= ent[1]:
+                    ps["prefix_local_hits"] += 1
+                    ps["decode_local_hits"] += 1
+                    rep.kv_pts = max(rep.kv_pts, ent[0])   # Table I load
+                elif bid not in expired:
+                    expired[bid] = ent[0]
+        if not expired:
+            return
+        res = dirx.wave(self.host_id, rep.kv_pts,
+                        read_groups=[list(expired)], req_wts=expired)
+        rep.kv_pts = int(res.new_pts)
+        for bid, (w, r) in res.leases.items():
+            if w == expired.get(bid, w):
+                rep.kv_leases[bid] = (w, r, int(dirx.tags[bid]))
+            else:
+                rep.kv_leases.pop(bid, None)   # superseded: private copy
+        ps["decode_renewals"] += len(expired)
 
     def _decode_tick(self, rep: DecodeReplica, act: List[Stream],
                      tick: int) -> None:
@@ -781,24 +1012,38 @@ class ServingCluster:
             self._finalize(s)
             act.remove(s)
 
+    def _mk_queues(self, requests: List[Request]) -> List[deque]:
+        """Arrival-order groups of ``n_replicas`` requests affined to
+        replicas round-robin (the old wave layout)."""
+        nr = len(self.replicas)
+        queues: List[deque] = [deque() for _ in range(nr)]
+        for k in range(0, len(requests), nr):
+            queues[(k // nr) % nr].extend(requests[k:k + nr])
+        return queues
+
+    def _busy(self, queues: List[deque]) -> bool:
+        return any(queues) or any(self._active)
+
+    def _paged_tick(self, queues: List[deque], tick: int) -> None:
+        """One scheduler tick: admissions then decode steps on every
+        replica.  The multi-host coordinator calls this per host to run K
+        clusters in lockstep against the shared directory."""
+        for r, rep in enumerate(self.replicas):
+            self._admit(r, rep, queues[r], self._active[r], tick)
+        for r, rep in enumerate(self.replicas):
+            if self._active[r]:
+                self._decode_tick(rep, self._active[r], tick)
+        self._maybe_rebase()
+
     def _run_paged(self, requests: List[Request]) -> None:
         """The continuous-batching scheduler: requests join the running
         batch as pages free up, finish independently, and release pages
-        immediately.  Arrival order groups of ``n_replicas`` requests are
-        affined to replicas round-robin (the old wave layout), but
-        admission and completion are fully independent per stream."""
-        nr = len(self.replicas)
-        queues = [deque() for _ in range(nr)]
-        for k in range(0, len(requests), nr):
-            queues[(k // nr) % nr].extend(requests[k:k + nr])
+        immediately.  Admission and completion are fully independent per
+        stream."""
+        queues = self._mk_queues(requests)
         tick = 0
-        while any(queues) or any(self._active):
-            for r, rep in enumerate(self.replicas):
-                self._admit(r, rep, queues[r], self._active[r], tick)
-            for r, rep in enumerate(self.replicas):
-                if self._active[r]:
-                    self._decode_tick(rep, self._active[r], tick)
-            self._maybe_rebase()
+        while self._busy(queues):
+            self._paged_tick(queues, tick)
             tick += 1
 
     # -- request loop -------------------------------------------------------
@@ -878,3 +1123,107 @@ class ServingCluster:
             **({"kv_pool_stacks": ",".join(s.pool for s in self._stacks)}
                if self._stacks else {}),
         }
+
+
+class MultiHostServingCluster:
+    """K serving hosts sharing ONE sharded lease directory.
+
+    Each host is a full :class:`ServingCluster` (replicas, local payload
+    cache, decode pages, its own weight store -- weight publishes sweep
+    every host, so version sequences align); the
+    :class:`~repro.core.shard_directory.ShardedLeaseDirectory` owns the
+    prefix region's ``(wts, rts)`` tables and home KV pages, hashed across
+    owner shards.  A prefix prefilled on host 0 is published write-behind
+    to its home shards and served on host K-1 by timestamp-ordered page
+    migration -- suffix-only prefill, no recomputation -- with the whole
+    wave's cross-host lease traffic batched into at most one message per
+    owner shard and ZERO invalidations or multicasts (the directory ledger
+    proves both).  Hosts tick in lockstep (the simulated-fleet analogue of
+    per-pod serving loops) and the coordinator drives one uniform
+    timestamp rebase across every shard and replica.
+    """
+
+    def __init__(self, cfg, init_params_fn: Callable[[], Any],
+                 n_hosts: int = 2, n_shards: Optional[int] = None,
+                 dir_backend: str = "numpy",
+                 sanitize: Optional[bool] = None, **kw):
+        if n_hosts < 1:
+            raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        self.hosts = [ServingCluster(cfg, init_params_fn,
+                                     sanitize=sanitize, **kw)
+                      for _ in range(n_hosts)]
+        h0 = self.hosts[0]
+        if not h0.paged:
+            raise ValueError(
+                "multi-host serving requires a paged family (dense/vlm/moe)")
+        eng = h0.prefix_engine
+        self.directory = ShardedLeaseDirectory(
+            h0.n_prefix_blocks, int(n_shards or n_hosts), n_hosts=n_hosts,
+            lease=eng.lease, backend=dir_backend, ts_bits=eng.ts_bits,
+            block_bytes=eng.block_bytes, kv_pools=eng.kv_pools,
+            kv_dtype=np.asarray(eng._kv_pool[:0]).dtype, sanitize=sanitize)
+        for h, host in enumerate(self.hosts):
+            host.attach_directory(self.directory, h)
+
+    def publish_weights(self, params) -> int:
+        """Hot-swap on every host + the directory's home-payload barrier:
+        still zero invalidation MESSAGES anywhere -- both invalidation
+        sweeps are manager-side bitmap clears."""
+        pts = 0
+        for host in self.hosts:
+            pts = host.publish_weights(params)
+        self.directory.publish_barrier()
+        return pts
+
+    def _maybe_rebase_all(self) -> None:
+        """One uniform shift across every directory shard and every
+        host's replicas: cross-shard timestamp order is protocol state."""
+        shift = self.directory.maybe_rebase()
+        if shift:
+            for host in self.hosts:
+                for rep in host.replicas:
+                    rep.rebase_kv(shift)
+
+    def run(self, requests: List[Request],
+            affinity: Optional[List[int]] = None
+            ) -> Tuple[List[Request], Dict]:
+        """Serve ``requests`` across the hosts.  ``affinity[i]`` pins
+        request i to a host (default round-robin); the cross-host smoke
+        pins a shared prefix to host 0 first, then its reuse to the last
+        host."""
+        if affinity is None:
+            affinity = [i % len(self.hosts) for i in range(len(requests))]
+        per_host: List[List[Request]] = [[] for _ in self.hosts]
+        for req, a in zip(requests, affinity):
+            per_host[int(a)].append(req)
+        queues = [h._mk_queues(reqs)
+                  for h, reqs in zip(self.hosts, per_host)]
+        tick = 0
+        while any(h._busy(q) for h, q in zip(self.hosts, queues)):
+            for h, host in enumerate(self.hosts):
+                host._paged_tick(queues[h], tick)
+            self._maybe_rebase_all()
+            tick += 1
+        self.directory.flush_deferred()    # drain write-behind payloads
+        return requests, self.coherence_report()
+
+    def coherence_report(self) -> Dict[str, Any]:
+        """Per-host reports summed, per-host reuse counters broken out
+        (the smoke asserts host K-1 skipped prefill flops), and the
+        directory's cross-host ledger merged in."""
+        agg: Dict[str, Any] = {}
+        for h, host in enumerate(self.hosts):
+            rep = host.coherence_report()
+            for k, v in rep.items():
+                if isinstance(v, (int, np.integer)) \
+                        and not isinstance(v, bool):
+                    agg[k] = agg.get(k, 0) + int(v)
+                elif k not in agg:
+                    agg[k] = v
+            for k in ("prefix_prefill_tokens_skipped", "prefix_flops_saved",
+                      "prefix_block_hits", "xhost_pages_fetched",
+                      "xhost_pages_published"):
+                agg[f"host{h}_{k}"] = rep[k]
+        agg["n_hosts"] = len(self.hosts)
+        agg.update(self.directory.report())
+        return agg

@@ -37,6 +37,22 @@ class TestBatchSpec:
     def test_scalar_leaf_replicates(self):
         assert shd.batch_spec(MULTI, ()) == P()
 
+    def test_activation_spec_sequence_parallel(self):
+        # residual stream (B, S, D): batch over DP, sequence over the
+        # otherwise-idle model axis -- the long-context activation fix
+        assert shd.activation_spec(MULTI, (16, 500000, 1024)) == \
+            P("data", "model", None)
+        assert shd.activation_spec(MULTI, (256, 4096, 1024)) == \
+            P(("pod", "data"), "model", None)
+
+    def test_activation_spec_guards(self):
+        # 2-D activations never sequence-shard; indivisible seq replicates
+        assert shd.activation_spec(MULTI, (256, 4096)) == \
+            P(("pod", "data"), None)
+        assert shd.activation_spec(MULTI, (16, 4097, 1024)) == \
+            P("data", None, None)
+        assert shd.activation_spec(MULTI, ()) == P()
+
     def test_shardings_tree_structure(self):
         mesh = make_host_mesh(data=1, model=1)
         batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),

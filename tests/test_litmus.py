@@ -47,7 +47,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import LeaseEngine, protocol as P
+from repro.core import LeaseEngine, ShardedLeaseDirectory, protocol as P
 from repro.kernels.tardis_lease import ops as lease_ops, ref as lease_ref
 
 X, Y = 0, 1
@@ -130,6 +130,72 @@ class ScalarManager:
 
     def state(self):
         return list(self.wts), list(self.rts)
+
+
+class ShardedManager:
+    """Sharded-directory manager: the SAME litmus programs resolved through
+    :class:`ShardedLeaseDirectory` with the two litmus addresses living on
+    **different owner shards** (``owner(addr) = addr % 2``) and every core
+    its own host.  Each protocol op is one directory wave, so the cross-host
+    invariant -- at most one request + one response per contacted owner
+    shard per wave -- is asserted on every single operation.
+
+    With ``pools=True`` the lane exercises timestamp-ordered page
+    migration: a store publishes its dual-stack payload write-behind
+    (``defer_publish`` + ``flush_deferred``) and every directory read also
+    fetches the home page, asserting the migrated content is exactly the
+    version the returned lease names.
+    """
+
+    def __init__(self, lease: int, n_cores: int, pools: bool = False,
+                 sanitize: bool = False, backend: str = "numpy"):
+        self.dirx = ShardedLeaseDirectory(
+            N_ADDR, 2, n_hosts=n_cores, lease=lease, backend=backend,
+            kv_pools=KV_POOLS if pools else None, kv_dtype=np.float32,
+            sanitize=sanitize or None)
+        self.pools = pools
+
+    def port(self, ci: int) -> "_ShardPort":
+        return _ShardPort(self, ci)
+
+    def state(self):
+        return self.dirx.wts.tolist(), self.dirx.rts.tolist()
+
+
+class _ShardPort:
+    """One core's view of the sharded directory (core index = host id)."""
+
+    def __init__(self, mgr: ShardedManager, host: int):
+        self.mgr = mgr
+        self.host = host
+
+    def read(self, addr, pts, req):
+        d = self.mgr.dirx
+        fetch = [addr] if (self.mgr.pools and d.home_ok(addr)) else []
+        res = d.wave(self.host, pts, read_groups=[[addr]],
+                     req_wts={addr: req}, fetch_bids=fetch)
+        assert res.shards_contacted <= 1 and res.msgs <= 2, res
+        w, r = res.leases[addr]
+        if addr in res.fetched:    # migrated page serves the named version
+            page = res.fetched[addr]
+            assert (page.wts, page.rts) == (w, r)
+            for name, arr in page.blocks.items():
+                assert np.all(np.asarray(arr, np.float32) == w), \
+                    (addr, name, w, np.asarray(arr))
+        return w, r, int(res.new_pts)
+
+    def write(self, addr, pts):
+        d = self.mgr.dirx
+        res = d.wave(self.host, pts, write_bids=[addr],
+                     tag_writes_with_ts=True)
+        assert res.shards_contacted <= 1 and res.msgs <= 2, res
+        ts = res.write_ts[addr]
+        if self.mgr.pools:         # write-behind: payload rides a flush
+            d.defer_publish(self.host, addr,
+                            {n: np.full((1,) + s, ts, np.float32)
+                             for n, s in KV_POOLS.items()}, tag=ts)
+            d.flush_deferred(self.host)
+        return ts
 
 
 class Core:
@@ -219,7 +285,8 @@ def run_litmus(progs, schedule, make_mgr, decode_reads=0):
     """
     mgr = make_mgr()
     versions = {a: {0: 0} for a in range(N_ADDR)}
-    cores = [Core(mgr, versions) for _ in progs]
+    cores = [Core(mgr.port(ci) if hasattr(mgr, "port") else mgr, versions)
+             for ci in range(len(progs))]
     cursors = [0] * len(progs)
     regs, loads, stores = {}, [], []
     for ci in schedule:
@@ -281,6 +348,45 @@ def test_litmus_forbidden_outcomes_never_observed(shape, lease,
             for addr2, ts in stores:
                 assert not (addr2 == addr and v < ts <= t), \
                     (shape, schedule, loads, stores)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-directory lane: same programs, cores on different owner shards
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", sorted(LITMUS))
+@pytest.mark.parametrize("backend,lease,decode_reads,pools",
+                         [("numpy", 4, 0, False),
+                          ("pallas", 4, 0, False),
+                          ("numpy", 4, 1, True)])
+def test_litmus_sharded_directory_matches_single_host_oracle(
+        shape, backend, lease, decode_reads, pools):
+    """X and Y live on DIFFERENT owner shards of a ShardedLeaseDirectory
+    (every core its own host) and must produce bit-for-bit the outcomes,
+    tables, and timestamps of the single-host engine oracle -- with at
+    most one request/response per owner shard per op and zero multicast
+    or invalidation messages.  The ``pools`` lane adds timestamp-ordered
+    page migration (write-behind publish + fetch-on-read) on top."""
+    progs, forbidden = LITMUS[shape]
+    n_cores = len(progs)
+    for schedule in interleavings(progs):
+        mgr = ShardedManager(lease, n_cores, pools=pools,
+                             sanitize=pools, backend=backend)
+        res = run_litmus(progs, schedule, lambda: mgr, decode_reads)
+        oracle = run_litmus(
+            progs, schedule,
+            lambda: EngineManager("numpy", lease), decode_reads)
+        assert res == oracle, (shape, schedule)
+        regs = res[0]
+        assert not forbidden(regs), (shape, schedule, regs)
+        d = mgr.dirx
+        assert d.stats.multicasts == 0
+        assert d.stats.invalidation_msgs == 0
+        assert d.max_msgs_per_wave() <= 2    # one shard touched per op
+        if pools:
+            assert d.stats.publishes > 0
+            assert d.stats.migrations > 0
+            assert d.sanitize_checks > 0
 
 
 # ---------------------------------------------------------------------------

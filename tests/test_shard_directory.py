@@ -1,0 +1,347 @@
+"""ShardedLeaseDirectory: the cross-host wave against the single-host truth.
+
+The directory's contract is that sharding the lease table changes the
+*wire*, never the *protocol*: per-shard engines evolve bit-for-bit like a
+single engine driven with the same per-owner-partition batches, a wave
+costs at most one request + one response per contacted owner shard, pages
+migrate carrying exactly the lease the same wave extended, and the zero
+columns (multicasts, invalidation messages) stay zero.  The migration
+sanitizer turns double publishes, tampered carries, and use-after-migrate
+into hard failures; the end-to-end check runs the SAME requests through a
+2-host cluster and a single-host cluster and demands identical tokens.
+The transport leg is pinned to the device path by running the
+``dist.collectives`` lax wrappers under ``shard_map`` on forced host
+devices and comparing against the numpy mirrors the directory tests ride.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import SanitizeError
+from repro.core import (FetchedPage, LeaseEngine, NumpyTransport,
+                        ShardedLeaseDirectory)
+from repro.core.shard_directory import DirStats
+from repro.dist import collectives
+
+N_BLOCKS = 16
+N_SHARDS = 4
+LEASE = 6
+POOLS = {"k": (1, 2), "v": (1, 2)}
+
+
+def _mk(n_hosts=2, pools=False, **kw):
+    return ShardedLeaseDirectory(
+        N_BLOCKS, N_SHARDS, n_hosts=n_hosts, lease=LEASE,
+        kv_pools=POOLS if pools else None, kv_dtype=np.float32,
+        block_bytes=16 if pools else 0, sanitize=True, **kw)
+
+
+def _page(val):
+    return {n: np.full((1,) + s, val, np.float32) for n, s in POOLS.items()}
+
+
+# ---------------------------------------------------------------------------
+# Protocol equivalence: sharding never changes the tables
+# ---------------------------------------------------------------------------
+
+def test_directory_tables_match_single_engine_oracle():
+    """Random wave streams: the reassembled global (wts, rts) tables and
+    every returned pts are bit-identical to ONE LeaseEngine driven with
+    the same batches partitioned by owner shard (the partition is the
+    only thing sharding is allowed to change)."""
+    rng = np.random.default_rng(7)
+    d = _mk(n_hosts=2)
+    oracle = LeaseEngine(N_BLOCKS, lease=LEASE, backend="numpy")
+    pts = 0
+    for step in range(60):
+        host = step % 2
+        if rng.random() < 0.35:
+            bids = sorted(rng.choice(N_BLOCKS, rng.integers(1, 5),
+                                     replace=False).tolist())
+            res = d.wave(host, pts, write_bids=bids,
+                         tag_writes_with_ts=True)
+            # oracle: same per-owner-shard batches at the wave's shared pts
+            exp_ts = {}
+            for s in sorted({d.owner(b) for b in bids}):
+                part = [b for b in bids if d.owner(b) == s]
+                ts = oracle.write(part, pts)
+                exp_ts.update({b: ts for b in part})
+            assert res.write_ts == exp_ts
+            pts = res.new_pts
+            assert pts == max(exp_ts.values())
+        else:
+            groups = [sorted(rng.choice(N_BLOCKS, rng.integers(1, 6),
+                                        replace=False).tolist())
+                      for _ in range(rng.integers(1, 4))]
+            req = {b: int(oracle.wts[b]) - int(rng.integers(0, 2))
+                   for g in groups for b in g}
+            res = d.wave(host, pts, read_groups=groups, req_wts=req)
+            for g, bids in enumerate(groups):
+                for s in sorted({d.owner(b) for b in bids}):
+                    part = [b for b in bids if d.owner(b) == s]
+                    r = oracle.read(part, pts,
+                                    req_wts=[req[b] for b in part])
+                    for j, b in enumerate(part):
+                        assert res.leases[b] == (int(r.wts[j]),
+                                                 int(r.rts[j]))
+                    assert res.group_pts[g] >= r.new_pts
+            pts = res.new_pts
+        np.testing.assert_array_equal(d.wts, oracle.wts)
+        np.testing.assert_array_equal(d.rts, oracle.rts)
+    assert d.stats.multicasts == 0
+    assert d.stats.invalidation_msgs == 0
+
+
+def test_wave_message_invariant_one_pair_per_owner_shard():
+    d = _mk(n_hosts=N_SHARDS)      # shard s lives on host s
+    # host 0 touches blocks on every shard: 3 remote pairs, shard 0 free
+    res = d.wave(0, 0, read_groups=[[0, 1, 2, 3]],
+                 write_bids=[4, 5, 6, 7], tag_writes_with_ts=True)
+    assert res.shards_contacted == 3
+    assert res.msgs == 6                       # one req + one rep each
+    assert d.stats.req_msgs == 3 and d.stats.rep_msgs == 3
+    # purely local wave: zero cross-host traffic
+    res = d.wave(0, res.new_pts, read_groups=[[0, 4, 8, 12]])
+    assert res.msgs == 0 and res.shards_contacted == 0
+    assert d.max_msgs_per_wave() == 6
+    assert d.stats.flits > 0 and d.stats.wire_bytes > d.stats.flits
+
+
+def test_transport_routes_every_remote_wave():
+    d = _mk(n_hosts=2)
+    assert isinstance(d.transport, NumpyTransport)
+    d.wave(0, 0, read_groups=[[1]])            # shard 1 -> host 1: remote
+    d.wave(0, 1, read_groups=[[0]])            # shard 0: local, no route
+    assert d.transport.routes == 1
+
+
+# ---------------------------------------------------------------------------
+# Timestamp-ordered page migration + write-behind publishing
+# ---------------------------------------------------------------------------
+
+def test_page_migration_round_trip():
+    d = _mk(pools=True)
+    res = d.wave(0, 0, write_bids=[1], write_tags=[77])
+    ts = res.write_ts[1]
+    assert int(d.tags[1]) == 77 and not d.home_ok(1)
+    d.defer_publish(0, 1, _page(ts))
+    assert not d.home_ok(1)                    # write-behind: not yet home
+    d.flush_deferred(0)
+    assert d.home_ok(1) and d.stats.publishes == 1
+    res = d.wave(1, ts, fetch_bids=[1])        # host 1 borrows the page
+    page = res.fetched[1]
+    assert (page.wts, page.rts) == res.leases[1]
+    assert page.tag == 77 and page.wver == int(d.wver[1])
+    for name, arr in page.blocks.items():
+        np.testing.assert_array_equal(np.asarray(arr), _page(ts)[name])
+    assert d.stats.migrations == 1
+
+
+def test_stale_publish_dropped_on_retag():
+    d = _mk(pools=True)
+    d.wave(0, 0, write_bids=[2], write_tags=[5])
+    d.defer_publish(0, 2, _page(1.0))
+    d.wave(1, 9, write_bids=[2], write_tags=[6])   # re-tag underneath
+    d.flush_deferred(0)
+    assert d.stats.publishes_dropped == 1
+    assert d.stats.publishes == 0 and not d.home_ok(2)
+
+
+def test_publish_barrier_invalidates_home_and_drops_queued():
+    d = _mk(pools=True)
+    d.wave(0, 0, write_bids=[1], write_tags=[3])
+    d.defer_publish(0, 1, _page(1.0))
+    d.flush_deferred(0)
+    assert d.home_ok(1)
+    d.wave(0, 5, write_bids=[5], write_tags=[4])
+    d.defer_publish(0, 5, _page(2.0))
+    ver = d.wver.copy()
+    d.publish_barrier()                        # weight publish swept hosts
+    assert not d.home_ok(1)                    # old-weight content is dead
+    np.testing.assert_array_equal(d.wver, ver + 1)
+    d.flush_deferred(0)
+    assert d.stats.publishes_dropped == 1      # queued old-version payload
+
+
+def test_pending_publishes_ride_the_next_wave():
+    d = _mk(pools=True)
+    d.wave(0, 0, write_bids=[1], write_tags=[9])
+    d.defer_publish(0, 1, _page(3.0))
+    flits_before = d.stats.flits
+    res = d.wave(0, 3, read_groups=[[1]])      # organic wave to shard 1
+    assert d.home_ok(1)                        # pend rode the request
+    assert d.stats.publishes == 1
+    assert res.msgs == 2
+    assert d.stats.flits > flits_before + 2    # payload flits were charged
+
+
+def test_maybe_rebase_shifts_all_shards_uniformly():
+    d = ShardedLeaseDirectory(N_BLOCKS, N_SHARDS, n_hosts=2, lease=LEASE,
+                              ts_bits=8, sanitize=True)
+    res = d.wave(0, 300, write_bids=list(range(N_BLOCKS)),
+                 tag_writes_with_ts=True)
+    assert res.new_pts >= 1 << 8               # past the 8-bit guard
+    before_w = d.wts.copy()
+    shift = d.maybe_rebase()
+    assert shift > 0 and d.rebases == 1
+    np.testing.assert_array_equal(d.wts, np.maximum(before_w - shift, 0))
+    assert d.ts_shift == shift
+    assert all(e.ts_shift == shift for e in d.shards)
+
+
+# ---------------------------------------------------------------------------
+# Migration sanitizer: the three bug classes raise
+# ---------------------------------------------------------------------------
+
+def test_sanitizer_double_publish_raises():
+    d = _mk(pools=True)
+    d.wave(0, 0, write_bids=[1], write_tags=[2])
+    d.defer_publish(0, 1, _page(1.0))
+    with pytest.raises(SanitizeError, match="double publish"):
+        d.defer_publish(0, 1, _page(1.0))
+
+
+def test_sanitizer_tampered_carry_raises():
+    d = _mk(pools=True)
+    page = FetchedPage(gid=1, wts=10, rts=20, tag=3, wver=0,
+                       blocks=_page(1.0))
+    with pytest.raises(SanitizeError, match="migrated under"):
+        d._msan.check_carried(page, (11, 20), 3)
+    with pytest.raises(SanitizeError, match="content tag"):
+        d._msan.check_carried(page, (10, 20), 4)
+
+
+def test_sanitizer_use_after_migrate_raises():
+    d = _mk(pools=True)
+    san = d._msan
+    san.mark_installed(1, 7, tag=5)
+    san.on_use(1, 7, 5)                        # still current: fine
+    with pytest.raises(SanitizeError, match="use-after-migrate"):
+        san.on_use(1, 7, 6)                    # directory moved on
+    san.on_invalidate(1, 7)
+    with pytest.raises(SanitizeError, match="never installed"):
+        san.on_use(1, 7, 5)
+
+
+# ---------------------------------------------------------------------------
+# Broadcast counterfactual
+# ---------------------------------------------------------------------------
+
+def test_broadcast_baseline_prices_the_multicast_tardis_never_sends():
+    d = _mk(n_hosts=4)
+    for i in range(8):
+        d.wave(i % 4, i * 10, write_bids=[i], tag_writes_with_ts=True)
+    base = d.broadcast_baseline()
+    assert base["writes"] == 8
+    assert base["bcast_inv_msgs"] == 8 * 3 * 2     # INV + ACK per sharer
+    assert base["tardis_inv_msgs"] == 0
+    assert base["bcast_inv_bytes"] > 0
+    rep = d.report()
+    assert rep["xhost_multicasts"] == 0
+    assert rep["xhost_invalidation_msgs"] == 0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: 2 hosts serve the same tokens as 1
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, n, shared=12, tail=6, max_new=2):
+    from repro.runtime import Request
+    rng = np.random.default_rng(0)
+    system = rng.integers(1, cfg.vocab, shared).astype(np.int32)
+    return [Request(i, np.concatenate(
+        [system, rng.integers(1, cfg.vocab, tail).astype(np.int32)]),
+        max_new=max_new) for i in range(n)]
+
+
+def test_two_host_cluster_matches_single_host_tokens():
+    from repro.configs import get_arch, reduced
+    from repro.models import init_params
+    from repro.runtime import MultiHostServingCluster, ServingCluster
+    cfg = reduced(get_arch("tinyllama-1.1b"), n_layers=2, d_model=64,
+                  vocab=128)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    kw = dict(n_replicas=1, prefix_block_tokens=4, kv_lease=16,
+              cache_len=96, selfinc_period=4, n_decode_pages=64,
+              max_pages=16, max_batch=2)
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                 sanitize=True, **kw)
+    reqs = _requests(cfg, 4)
+    # host 0 prefills + publishes the shared prefix, then host 1 serves
+    # the same system prompt suffix-only (the cross-host reuse pitch)
+    mh.run(reqs[:2], affinity=[0, 0])
+    _, rep = mh.run(reqs[2:], affinity=[1, 1])
+    assert rep["host1_prefix_prefill_tokens_skipped"] > 0
+    assert rep["host1_xhost_pages_fetched"] > 0
+    assert rep["xhost_multicasts"] == 0
+    assert rep["xhost_invalidation_msgs"] == 0
+    assert rep["xhost_max_msgs_per_wave"] <= \
+        2 * max(1, rep["xhost_max_shards_per_wave"])
+    single = ServingCluster(cfg, lambda: params, **kw)
+    sreqs = _requests(cfg, 4)
+    single.run(sreqs[:2])
+    single.run(sreqs[2:])
+    for a, b in zip(reqs, sreqs):
+        assert a.done and b.done
+        np.testing.assert_array_equal(np.asarray(a.output),
+                                      np.asarray(b.output),
+                                      err_msg=f"request {a.rid}")
+
+
+# ---------------------------------------------------------------------------
+# Device collectives vs the numpy mirrors (forced host devices)
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_CODE = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.dist import collectives as C
+
+devs = np.array(jax.devices())
+n = devs.size
+assert n == 4, n
+mesh = Mesh(devs, ("data",))
+
+def run(fn, x):
+    f = shard_map(lambda v: fn(v, "data"), mesh=mesh,
+                  in_specs=P("data"), out_specs=P("data"))
+    return np.asarray(jax.jit(f)(jnp.asarray(x)))
+
+# one row per device
+x = np.arange(n * 4, dtype=np.float32).reshape(n, 4) + 1.0
+xs = [x[i:i + 1] for i in range(n)]
+np.testing.assert_allclose(run(C.psum, x), np.concatenate(C.np_psum(xs)))
+np.testing.assert_allclose(run(C.all_gather, x),
+                           np.concatenate(C.np_all_gather(xs)))
+
+# n rows per device (scatter/all-to-all need dim0 divisible by n)
+y = np.arange(n * n * 2, dtype=np.float32).reshape(n * n, 2)
+ys = [y[i * n:(i + 1) * n] for i in range(n)]
+np.testing.assert_allclose(run(C.reduce_scatter, y),
+                           np.concatenate(C.np_reduce_scatter(ys)))
+np.testing.assert_allclose(run(C.all_to_all, y),
+                           np.concatenate(C.np_all_to_all(ys)))
+print("COLLECTIVES-OK")
+"""
+
+
+def test_device_collectives_match_numpy_mirrors():
+    """The lax wrappers under shard_map on 4 forced host devices agree
+    with the numpy mirrors the NumpyTransport rides (needs a subprocess:
+    jax is already initialized single-device in this one)."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", _COLLECTIVE_CODE], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr
+    assert "COLLECTIVES-OK" in out.stdout
