@@ -302,6 +302,52 @@ def bench_directory(n_blocks: int, iters: int):
           f"{fetch_msgs} msgs "
           f"({out['reuse']['msgs_per_reused_block']:.3f} msgs/block), "
           f"{dr.stats.multicasts} multicasts")
+
+    # disaggregated decode pod: the prefill pod (host 0) publishes an
+    # 8-block prefix, the decode pod (host 1) subscribes, gets the
+    # publish-then-notify wake, migrates the pages once, then idles in
+    # steady state -- its per-tick lease traffic is batched data-less
+    # renewals only.  All message ledgers, fully deterministic.
+    dd = ShardedLeaseDirectory(n_blocks, 2, n_hosts=2, lease=16,
+                               kv_pools={"kv": (1, 16)},
+                               kv_dtype=np.float32, block_bytes=64)
+    bids = list(range(8))
+    res = dd.wave(0, 0, write_bids=bids, tag_writes_with_ts=True)
+    handoff0 = dd.stats.msgs
+    assert dd.subscribe(1, bids) == []         # cold: watch, don't poll
+    for b in bids:
+        dd.defer_publish(0, b, {"kv": np.zeros((1, 1, 16), np.float32)})
+    dd.flush_deferred(0)                       # fires the notify wave
+    woken = sorted(dd.pop_notifications(1))
+    res = dd.wave(1, int(res.new_pts), read_groups=[bids],
+                  fetch_bids=bids)
+    handoff_msgs = dd.stats.msgs - handoff0
+    pts = int(res.new_pts)
+    leases = dict(res.leases)
+    ticks, renew_waves, msgs0 = 64, 0, dd.stats.msgs
+    for _ in range(ticks):
+        pts += 1                               # one decode step
+        expired = {b: leases[b][0] for b in bids if pts > leases[b][1]}
+        if expired:
+            r2 = dd.wave(1, pts, read_groups=[list(expired)],
+                         req_wts=expired)
+            pts = int(r2.new_pts)
+            leases.update(r2.leases)
+            renew_waves += 1
+    decode_msgs = dd.stats.msgs - msgs0
+    out["disagg"] = {
+        "blocks": len(bids), "woken": len(woken),
+        "handoff_msgs": handoff_msgs,
+        "decode_ticks": ticks, "renew_waves": renew_waves,
+        "decode_msgs": decode_msgs,
+        "decode_msgs_per_tick": decode_msgs / ticks,
+        "multicasts": dd.stats.multicasts,
+        "invalidation_msgs": dd.stats.invalidation_msgs}
+    print(f"# dir_disagg: {len(woken)}/{len(bids)} pages woke the decode "
+          f"pod ({handoff_msgs} hand-off msgs), then {decode_msgs} msgs "
+          f"over {ticks} decode ticks "
+          f"({out['disagg']['decode_msgs_per_tick']:.4f} msgs/tick, "
+          f"{renew_waves} renewal waves, {dd.stats.multicasts} multicasts)")
     return out
 
 
@@ -422,6 +468,10 @@ def tracked_ratios(out):
                                        CHECK_TOLERANCE)
             r["dir_msgs_per_reused_block"] = (
                 rs["msgs_per_reused_block"], False, CHECK_TOLERANCE)
+        dg = d.get("disagg")
+        if dg:
+            r["dir_decode_msgs_per_tick"] = (
+                dg["decode_msgs_per_tick"], False, CHECK_TOLERANCE)
     return r
 
 

@@ -112,3 +112,54 @@ def markdown_table(rows: List[Dict], mesh_filter: str = "single") -> str:
             f"{r['dominant']} | {r['roofline_frac']:.3f} | "
             f"{r['model_vs_hlo']:.3f} |")
     return "\n".join(lines)
+
+
+# -- disaggregated prefill/decode split -------------------------------------
+
+def disagg_rows(rows: List[Dict], prefill_shape: str = "prefill_32k",
+                decode_shape: str = "decode_32k") -> List[Dict]:
+    """Pair each (arch, mesh)'s prefill and decode cells into one
+    split-roofline row: the disaggregation pitch is that the two phases
+    are bound by DIFFERENT terms (prefill by flops, decode by the
+    collectives), so a prefill pod and a decode pod each run against
+    their own ceiling instead of the worse of both.  ``split_wins`` marks
+    the cells where the dry-run-calibrated terms actually show that
+    asymmetry."""
+    by_key = {(r["arch"], r["mesh"], r["shape"]): r for r in rows}
+    out = []
+    for (arch, mesh, shape), pre in sorted(by_key.items()):
+        if shape != prefill_shape:
+            continue
+        dec = by_key.get((arch, mesh, decode_shape))
+        if dec is None:
+            continue
+        out.append({
+            "arch": arch, "mesh": mesh,
+            "prefill_dominant": pre["dominant"],
+            "prefill_compute_s": pre["compute_s"],
+            "prefill_collective_s": pre["collective_s"],
+            "decode_dominant": dec["dominant"],
+            "decode_compute_s": dec["compute_s"],
+            "decode_collective_s": dec["collective_s"],
+            "split_wins": (pre["dominant"] == "compute"
+                           and dec["dominant"] != "compute"),
+        })
+    return out
+
+
+def markdown_disagg_table(rows: List[Dict],
+                          mesh_filter: str = "multi") -> str:
+    """The split-roofline table EXPERIMENTS.md embeds: one row per arch,
+    prefill-pod vs decode-pod bound terms side by side."""
+    lines = ["| arch | prefill dom | prefill compute s | "
+             "decode dom | decode collective s | split wins |",
+             "|---|---|---|---|---|---|"]
+    for r in disagg_rows(rows):
+        if mesh_filter not in r["mesh"]:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['prefill_dominant']} | "
+            f"{r['prefill_compute_s']:.4f} | {r['decode_dominant']} | "
+            f"{r['decode_collective_s']:.4f} | "
+            f"{'yes' if r['split_wins'] else 'no'} |")
+    return "\n".join(lines)

@@ -74,6 +74,21 @@ grep -Eq "host1_xhost_pages_fetched +[1-9]" /tmp/serve_xhost_check.out
 grep -Eq "xhost_multicasts +0" /tmp/serve_xhost_check.out
 grep -Eq "xhost_invalidation_msgs +0" /tmp/serve_xhost_check.out
 
+# disaggregated serving smoke: 1 prefill pod + 1 decode pod over the same
+# directory.  The decode pod must perform ZERO cold-prefix prefills (the
+# router forwards cold work to the prefill pod; the publish-then-notify
+# wake hands the stream back for suffix-only serving), still with zero
+# multicast/invalidation traffic, under the sanitizers.
+TARDIS_SANITIZE=1 python -m repro.launch.serve --arch tinyllama-1.1b \
+    --roles prefill,decode --replicas 1 --requests 6 --max-new 2 \
+    --prefix-len 16 --prefix-block 4 --decode-pages 64 --max-pages 16 \
+    --max-batch 2 | tee /tmp/serve_disagg_check.out
+grep -Eq "host1_role_cold_prefills +0" /tmp/serve_disagg_check.out
+grep -Eq "host0_role_prefill_jobs +[1-9]" /tmp/serve_disagg_check.out
+grep -Eq "host1_prefix_prefill_tokens_skipped +[1-9]" /tmp/serve_disagg_check.out
+grep -Eq "xhost_notifies +[1-9]" /tmp/serve_disagg_check.out
+grep -Eq "xhost_multicasts +0" /tmp/serve_disagg_check.out
+
 # bench smoke: every lease_bench path (engine, wave, paged-vs-dense
 # decode) runs end to end so the bench code cannot rot.
 python benchmarks/lease_bench.py --smoke

@@ -65,6 +65,8 @@ class DirStats:
     migrations: int = 0          # payload pages moved host-to-host
     publishes: int = 0           # write-behind payloads installed at home
     publishes_dropped: int = 0   # stale (re-tagged before the flush landed)
+    watches: int = 0             # publish-then-notify subscriptions taken
+    notifies: int = 0            # landed-page notifications delivered
     multicasts: int = 0          # stays 0: Tardis sends none
     invalidation_msgs: int = 0   # stays 0: expiry is a timestamp compare
 
@@ -181,6 +183,12 @@ class ShardedLeaseDirectory:
         self.wave_log: List[dict] = []
         # write-behind queues: host -> shard -> [(gid, blocks, tag, wver)]
         self._pending: Dict[int, Dict[int, list]] = {}
+        # publish-then-notify: gid -> {watcher host: expected tag or None};
+        # a successful home install delivers a notification message (one
+        # pair per (owner shard, watcher host) per wave) so a decode pod
+        # learns a page landed without polling the directory
+        self._watch: Dict[int, Dict[int, Optional[int]]] = {}
+        self._notify_ready: Dict[int, List[int]] = {}
         self.transport = transport if transport is not None else \
             NumpyTransport(self.n_hosts)
         if sanitize is None:
@@ -252,9 +260,11 @@ class ShardedLeaseDirectory:
 
     def _apply_pends(self, host: int, shard: int) -> int:
         """Install this host's queued publishes at ``shard``; returns the
-        number of payload blocks that rode the request message."""
+        number of payload blocks that rode the request message.  Installed
+        blocks with watchers trigger a publish-then-notify exchange."""
         pends = self._pending.get(int(host), {}).pop(shard, [])
         eng = self.shards[shard]
+        landed: List[int] = []
         for gid, blocks, tag, wver in pends:
             if self._msan is not None:
                 self._msan.on_flush(host, gid, tag, wver)
@@ -263,7 +273,96 @@ class ShardedLeaseDirectory:
                 continue
             eng.write_kv(np.asarray([self.slot(gid)], np.int64), blocks)
             self.stats.publishes += 1
+            landed.append(gid)
+        if landed:
+            self._emit_notifies(shard, landed)
         return len(pends)
+
+    # -- publish-then-notify --------------------------------------------------
+
+    def subscribe(self, host: int, gids: Sequence,
+                  tags: Optional[Sequence] = None) -> List[int]:
+        """Register ``host`` to be told when each gid's home payload lands
+        (the disaggregated hand-off: a decode pod subscribes to the pages a
+        prefill pod will publish, instead of polling the directory).
+
+        Returns the gids that are ALREADY home (under the expected ``tags``
+        when given) -- no watch is taken for those.  The remaining watches
+        ride one request + one ack message per contacted remote owner shard
+        (the same <=1-message-pair-per-shard budget every wave obeys); the
+        matching notification is delivered by :meth:`_apply_pends` when the
+        publish installs, and drained with :meth:`pop_notifications`.
+        """
+        host = int(host)
+        gids = list(gids)
+        if tags is not None and len(tags) != len(gids):
+            raise ValueError("tags must align with gids")
+        want: Dict[int, Optional[int]] = {}
+        for i, g in enumerate(gids):
+            want.setdefault(int(g), None if tags is None else int(tags[i]))
+        landed, by_shard = [], {}
+        for g, tag in want.items():
+            if self.home_ok(g) and (tag is None or int(self.tags[g]) == tag):
+                landed.append(g)
+                continue
+            self._watch.setdefault(g, {})[host] = tag
+            by_shard.setdefault(self.owner(g), []).append(g)
+            self.stats.watches += 1
+        if not by_shard:
+            return landed
+        sizes = np.zeros((self.n_hosts, 2), np.int64)
+        log = {"host": host, "kind": "watch", "shards": sorted(by_shard),
+               "msgs": 0, "flits": 0}
+        for s, watched in sorted(by_shard.items()):
+            if self.shard_host(s) == host:
+                continue                            # local shard: free
+            req = 1 + protocol.data_flits(4 * len(watched))
+            rep = 1                                 # bare ack
+            self.stats.req_msgs += 1
+            self.stats.rep_msgs += 1
+            self.stats.flits += req + rep
+            sizes[self.shard_host(s)] += (req, rep)
+            log["msgs"] += 2
+            log["flits"] += req + rep
+        if self.transport is not None and sizes.any():
+            self.transport.exchange(host % self.n_hosts, sizes)
+        self.wave_log.append(log)
+        return landed
+
+    def _emit_notifies(self, shard: int, gids: Sequence[int]) -> None:
+        """A publish landed at ``shard`` for ``gids``: deliver one
+        notification message pair per watcher host (all of a watcher's
+        landed gids in this wave batch into ONE pair, so the notify kind
+        stays inside the per-shard-per-wave message budget)."""
+        by_watcher: Dict[int, List[int]] = {}
+        for g in gids:
+            for w, tag in self._watch.pop(int(g), {}).items():
+                if tag is not None and int(self.tags[g]) != tag:
+                    continue            # landed under a different content
+                by_watcher.setdefault(w, []).append(int(g))
+        src = self.shard_host(shard)
+        for w, got in sorted(by_watcher.items()):
+            self._notify_ready.setdefault(w, []).extend(got)
+            self.stats.notifies += len(got)
+            if w == src:
+                continue                            # watcher is home: free
+            req = 1 + protocol.data_flits(4 * len(got))
+            rep = 1                                 # bare ack
+            self.stats.req_msgs += 1
+            self.stats.rep_msgs += 1
+            self.stats.flits += req + rep
+            sizes = np.zeros((self.n_hosts, 2), np.int64)
+            sizes[w] = (req, rep)
+            if self.transport is not None:
+                self.transport.exchange(src, sizes)
+            self.wave_log.append(
+                {"host": src, "kind": "notify", "shards": [shard],
+                 "watcher": w, "gids": list(got), "msgs": 2,
+                 "flits": req + rep})
+
+    def pop_notifications(self, host: int) -> List[int]:
+        """Drain the landed-page notifications delivered to ``host``."""
+        return self._notify_ready.pop(int(host), [])
 
     def flush_deferred(self, host: Optional[int] = None) -> int:
         """Drain write-behind queues (end of run / host drain) as
@@ -503,6 +602,8 @@ class ShardedLeaseDirectory:
             "xhost_migrations": st.migrations,
             "xhost_publishes": st.publishes,
             "xhost_publishes_dropped": st.publishes_dropped,
+            "xhost_watches": st.watches,
+            "xhost_notifies": st.notifies,
             "xhost_multicasts": st.multicasts,
             "xhost_invalidation_msgs": st.invalidation_msgs,
             "xhost_max_msgs_per_wave": self.max_msgs_per_wave(),

@@ -42,7 +42,18 @@ def main():
                          "directory (cross-host prefix-KV migration)")
     ap.add_argument("--shards", type=int, default=0,
                     help="owner shards for --hosts mode (default: --hosts)")
+    ap.add_argument("--roles", default="",
+                    help="comma list of per-host roles (prefill|decode|"
+                         "mixed), e.g. 'prefill,decode,decode'; implies "
+                         "--hosts len(roles) and routes cold prefixes "
+                         "through the prefill pods")
     args = ap.parse_args()
+    roles = [r.strip() for r in args.roles.split(",") if r.strip()]
+    if roles:
+        if args.hosts > 1 and args.hosts != len(roles):
+            raise SystemExit(
+                f"--hosts {args.hosts} != {len(roles)} roles in --roles")
+        args.hosts = len(roles)
 
     cfg = reduced(get_arch(args.arch))
     if cfg.family == "encdec":
@@ -61,10 +72,18 @@ def main():
                 [system, rng.integers(1, cfg.vocab, rng.integers(4, 16))
                  .astype(np.int32)]), max_new=args.max_new)
             for i in range(args.requests)]
-    if args.hosts > 1:
+    if roles and any(r != "mixed" for r in roles):
+        # disaggregated fleet: ONE routed run -- the admission router
+        # forwards cold prefixes to the prefill pods, decode pods serve
+        # the handed-back streams suffix-only (default decode affinity)
         cluster = MultiHostServingCluster(
             cfg, lambda: params, n_hosts=args.hosts,
-            n_shards=args.shards or None, **kw)
+            n_shards=args.shards or None, roles=roles, **kw)
+        done, report = cluster.run(reqs)
+    elif args.hosts > 1:
+        cluster = MultiHostServingCluster(
+            cfg, lambda: params, n_hosts=args.hosts,
+            n_shards=args.shards or None, roles=roles or None, **kw)
         # phase 1: host 0 prefills + publishes the shared prefix; phase 2:
         # the other hosts serve the same system prompt suffix-only
         n0 = max(1, len(reqs) // args.hosts)
@@ -95,6 +114,16 @@ def main():
               f"{report['xhost_migrations']} pages migrated, "
               f"{report['xhost_multicasts']} multicasts, "
               f"{report['xhost_invalidation_msgs']} invalidation msgs")
+    if roles and any(r != "mixed" for r in roles):
+        ticks = sum(report.get(f"host{h}_decode_ticks", 0)
+                    for h, r in enumerate(roles) if r != "prefill")
+        rmsgs = sum(report.get(f"host{h}_role_renewal_msgs", 0)
+                    for h, r in enumerate(roles) if r != "prefill")
+        per_tick = rmsgs / ticks if ticks else 0.0
+        print(f"disaggregated: roles={','.join(roles)}, "
+              f"{report['router_cold_forwards']} cold forwards, "
+              f"{report['router_handoffs']} handoffs, "
+              f"decode-pod renewal msgs/tick {per_tick:.3f}")
 
 
 if __name__ == "__main__":

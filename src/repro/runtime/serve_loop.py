@@ -300,7 +300,22 @@ class ServingCluster:
             "pinned_relocations": 0, "paged_mid_batch_admissions": 0,
             "paged_admission_deferrals": 0, "pool_page_peak": 0,
             "xhost_pages_fetched": 0, "xhost_pages_published": 0,
+            # per-role ledger (disaggregated serving): a COLD-prefix
+            # prefill is an admission that ran the full prefill although
+            # the prompt had at least one coverable leading block -- a
+            # decode pod must never do one (the router forwards that work
+            # to a prefill pod); suffix admissions, published pages,
+            # prefill-pod jobs, decode ticks, and renewal messages break
+            # the same traffic down by what each role actually did.
+            "role_cold_prefills": 0, "role_suffix_admissions": 0,
+            "role_pages_published": 0, "role_prefill_jobs": 0,
+            "role_renewal_msgs": 0, "decode_ticks": 0,
         }
+        # disaggregated serving role: "mixed" (default, serves everything),
+        # "prefill" (only admits cold prefixes, publishes, never decodes),
+        # or "decode" (never prefills a cold prefix; cold work is routed
+        # to a prefill pod and handed back by publish-then-notify).
+        self.role = "mixed"
         # multi-host mode: when a ShardedLeaseDirectory is attached, the
         # directory shards own the prefix region's (wts, rts) tables and
         # home payloads; the local engine keeps only this host's payload
@@ -796,6 +811,13 @@ class ServingCluster:
                 plan.repair_writers.setdefault(
                     b, (ji, bids.index(b)))
         covered, skip = n_ok, n_ok * bt
+        if bids:
+            if skip:
+                ps["role_suffix_admissions"] += 1
+            else:
+                # full prefill of a chain-hashable prefix: the cold-prefix
+                # work the router keeps off decode pods
+                ps["role_cold_prefills"] += 1
         cache_len = max(bt, -(-plen // bt) * bt)
         # suffix right-padded to the block bucket (cache_len - skip); the
         # real last position rides in as a traced index, so one trace
@@ -849,6 +871,7 @@ class ServingCluster:
                         {p: np.asarray(a[i_wb:i_wb + 1])
                          for p, a in blocks.items()})
                     ps["xhost_pages_published"] += 1
+                    ps["role_pages_published"] += 1
         # page table: covered shared blocks (pinned + leased for the whole
         # decode) then privately allocated pages for suffix + decode KV
         total_pages = -(-(plen + req.max_new) // bt)
@@ -882,6 +905,67 @@ class ServingCluster:
             self._finalize(stream)
             return None
         return stream
+
+    def prefill_only_tick(self, queue: deque, tick: int) -> List[Request]:
+        """One prefill-pod tick: admit up to ``max_batch`` forwarded jobs
+        per replica, run the full prefill over each prompt's block-aligned
+        head, and queue the prefix pages write-behind (the coordinator
+        flushes after the tick, which fires the publish-then-notify wave a
+        waiting decode pod subscribed to).  Nothing decodes here: each job
+        admits as a zero-token SHADOW request over the aligned head, so
+        its pages allocate, publish, and free inside the tick -- a prefill
+        pod holds no decode state across ticks, and the caller's Request
+        objects are never touched.  Returns the jobs completed this tick
+        (including pass-throughs too short to have a block-aligned head).
+        """
+        ps = self.prefix_stats
+        bt = self.prefix_block_tokens
+        done: List[Request] = []
+        for r, rep in enumerate(self.replicas):
+            jobs: List[Request] = []
+            shadows: List[Request] = []
+            budget = self.prefix_engine.free_page_count()
+            while queue and len(jobs) < rep.max_batch:
+                req = queue[0]
+                cut = (len(req.prompt) // bt) * bt
+                if cut == 0:
+                    # no block-aligned head to publish: nothing a prefill
+                    # pod can contribute, hand the request straight back
+                    done.append(queue.popleft())
+                    continue
+                shadow = Request(req.rid, req.prompt[:cut], max_new=0)
+                need = self._pages_needed(shadow)
+                if need > self.max_pages:
+                    raise ValueError(
+                        f"prefill job {req.rid} needs {need} pages > "
+                        f"max_pages={self.max_pages}")
+                if need > budget:
+                    if not jobs and need > self.n_decode_pages:
+                        raise RuntimeError(
+                            f"prefill job {req.rid} needs {need} pages; "
+                            f"pool has {self.n_decode_pages}")
+                    ps["paged_admission_deferrals"] += 1
+                    break
+                budget -= need
+                jobs.append(queue.popleft())
+                shadows.append(shadow)
+            if not shadows:
+                continue
+            self._admit_reserved = sum(self._pages_needed(s)
+                                       for s in shadows)
+            params = rep.params()
+            wver = rep.reader.cached_version("params")
+            plan = self._lease_prefix_wave(rep, [s.prompt for s in shadows])
+            mat_cache: Dict[Tuple[int, ...], Tuple] = {}
+            for ji, shadow in enumerate(shadows):
+                self._admit_reserved -= self._pages_needed(shadow)
+                s = self._admit_one(rep, shadow, plan, ji, params, wver,
+                                    mat_cache, tick)
+                assert s is None, "max_new=0 shadow must finalize inline"
+            self._admit_reserved = 0
+            ps["role_prefill_jobs"] += len(jobs)
+            done.extend(jobs)
+        return done
 
     def _finalize(self, s: Stream) -> None:
         """A finished request releases everything immediately: pins drop,
@@ -967,6 +1051,7 @@ class ServingCluster:
         res = dirx.wave(self.host_id, rep.kv_pts,
                         read_groups=[list(expired)], req_wts=expired)
         rep.kv_pts = int(res.new_pts)
+        ps["role_renewal_msgs"] += res.msgs
         for bid, (w, r) in res.leases.items():
             if w == expired.get(bid, w):
                 rep.kv_leases[bid] = (w, r, int(dirx.tags[bid]))
@@ -980,6 +1065,7 @@ class ServingCluster:
         token, all KV traffic through pool pages."""
         eng = self.prefix_engine
         rep.kv_pts += 1                   # the tick is one logical step
+        self.prefix_stats["decode_ticks"] += 1
         self._renew_decode_leases(rep, act)
         bt = self.prefix_block_tokens
         page_rows = np.stack([s.page_row for s in act])
@@ -1122,6 +1208,12 @@ class ServingCluster:
                e.kv_pool_tokens.get(s.pool, 0) for s in self._stacks},
             **({"kv_pool_stacks": ",".join(s.pool for s in self._stacks)}
                if self._stacks else {}),
+            # config-like scalars (identical across a fleet's hosts; the
+            # multi-host aggregate reports them once instead of summing)
+            "ts_bits": self.prefix_engine.ts_bits,
+            "kv_lease": self.prefix_engine.lease,
+            "n_prefix_blocks": self.n_prefix_blocks,
+            "role": self.role,
         }
 
 
@@ -1143,15 +1235,59 @@ class MultiHostServingCluster:
     timestamp rebase across every shard and replica.
     """
 
+    ROLES = ("prefill", "decode", "mixed")
+
     def __init__(self, cfg, init_params_fn: Callable[[], Any],
                  n_hosts: int = 2, n_shards: Optional[int] = None,
                  dir_backend: str = "numpy",
-                 sanitize: Optional[bool] = None, **kw):
+                 sanitize: Optional[bool] = None,
+                 roles: Optional[List[str]] = None,
+                 spill_depth: int = 4, **kw):
         if n_hosts < 1:
             raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+        if roles is None:
+            roles = ["mixed"] * n_hosts
+        roles = [str(r) for r in roles]
+        if len(roles) != n_hosts:
+            raise ValueError(
+                f"roles has {len(roles)} entries for {n_hosts} hosts")
+        bad = sorted(set(roles) - set(self.ROLES))
+        if bad:
+            raise ValueError(
+                f"unknown roles {bad}; each must be one of {self.ROLES}")
+        if "decode" in roles and not any(
+                r in ("prefill", "mixed") for r in roles):
+            raise ValueError(
+                "decode pods need at least one prefill or mixed host to "
+                "forward cold prefixes to")
+        if "prefill" in roles and not any(
+                r in ("decode", "mixed") for r in roles):
+            raise ValueError(
+                "prefill pods need at least one decode or mixed host to "
+                "hand streams back to")
+        self.roles = roles
+        self.spill_depth = int(spill_depth)
+        # how many routed ticks a forwarded stream may wait on its
+        # publish-then-notify wake before the decode pod force-admits it
+        # (a dropped publish then surfaces as a ledgered cold prefill
+        # instead of a hang)
+        self.handoff_patience = 16
         self.hosts = [ServingCluster(cfg, init_params_fn,
                                      sanitize=sanitize, **kw)
                       for _ in range(n_hosts)]
+        for host, role in zip(self.hosts, roles):
+            host.role = role
+        # cold-prefix work chain-hashes onto pure prefill pods; a fleet
+        # with no pure prefill pod prefills on the mixed hosts
+        self._prefill_pool = ([h for h, r in enumerate(roles)
+                               if r == "prefill"]
+                              or [h for h, r in enumerate(roles)
+                                  if r == "mixed"])
+        self._route_stats = {
+            "router_warm_direct": 0, "router_cold_forwards": 0,
+            "router_spills": 0, "router_handoffs": 0,
+            "router_forced_admissions": 0,
+        }
         h0 = self.hosts[0]
         if not h0.paged:
             raise ValueError(
@@ -1168,11 +1304,19 @@ class MultiHostServingCluster:
     def publish_weights(self, params) -> int:
         """Hot-swap on every host + the directory's home-payload barrier:
         still zero invalidation MESSAGES anywhere -- both invalidation
-        sweeps are manager-side bitmap clears."""
+        sweeps are manager-side bitmap clears.  Returns the max publish
+        timestamp across hosts (per-host stores tick independently) and
+        asserts the fleet agrees on the post-publish weight version."""
         pts = 0
         for host in self.hosts:
-            pts = host.publish_weights(params)
+            pts = max(pts, host.publish_weights(params))
         self.directory.publish_barrier()
+        vers = {host.store.versions().get("params")
+                for host in self.hosts}
+        if len(vers) != 1:
+            raise RuntimeError(
+                f"hosts disagree on post-publish weight version: "
+                f"{sorted(vers)}")
         return pts
 
     def _maybe_rebase_all(self) -> None:
@@ -1188,14 +1332,43 @@ class MultiHostServingCluster:
             affinity: Optional[List[int]] = None
             ) -> Tuple[List[Request], Dict]:
         """Serve ``requests`` across the hosts.  ``affinity[i]`` pins
-        request i to a host (default round-robin); the cross-host smoke
-        pins a shared prefix to host 0 first, then its reuse to the last
-        host."""
+        request i to a (decode-capable) host -- default round-robin over
+        the decode/mixed hosts; the cross-host smoke pins a shared prefix
+        to host 0 first, then its reuse to the last host.  A symmetric
+        fleet (all mixed) runs every host's scheduler directly; a fleet
+        with prefill/decode roles routes each request through the
+        admission router first (see :meth:`_run_routed`)."""
+        serve_pool = [h for h, r in enumerate(self.roles)
+                      if r != "prefill"]
         if affinity is None:
-            affinity = [i % len(self.hosts) for i in range(len(requests))]
+            affinity = [serve_pool[i % len(serve_pool)]
+                        for i in range(len(requests))]
+        if len(affinity) != len(requests):
+            raise ValueError(
+                f"affinity has {len(affinity)} entries for "
+                f"{len(requests)} requests")
+        for i, a in enumerate(affinity):
+            a = int(a)
+            if not 0 <= a < len(self.hosts):
+                raise ValueError(
+                    f"affinity[{i}] = {a} is out of range for "
+                    f"{len(self.hosts)} hosts (negative ids do not wrap)")
+            if self.hosts[a].role == "prefill":
+                raise ValueError(
+                    f"affinity[{i}] = {a} pins a stream to a prefill-only "
+                    f"pod; pin it to a decode or mixed host")
+        affinity = [int(a) for a in affinity]
+        if all(r == "mixed" for r in self.roles):
+            self._run_symmetric(requests, affinity)
+        else:
+            self._run_routed(requests, affinity)
+        return requests, self.coherence_report()
+
+    def _run_symmetric(self, requests: List[Request],
+                       affinity: List[int]) -> None:
         per_host: List[List[Request]] = [[] for _ in self.hosts]
         for req, a in zip(requests, affinity):
-            per_host[int(a)].append(req)
+            per_host[a].append(req)
         queues = [h._mk_queues(reqs)
                   for h, reqs in zip(self.hosts, per_host)]
         tick = 0
@@ -1205,25 +1378,160 @@ class MultiHostServingCluster:
             self._maybe_rebase_all()
             tick += 1
         self.directory.flush_deferred()    # drain write-behind payloads
-        return requests, self.coherence_report()
+
+    # -- disaggregated prefill/decode routing -------------------------------
+
+    def _enqueue(self, queues: List[List[deque]], arrivals: List[int],
+                 h: int, req: Request) -> None:
+        """Hand a stream to host ``h``'s scheduler, replica-affined in the
+        same round-robin-by-group layout ``_mk_queues`` produces for an
+        up-front request list."""
+        nr = len(self.hosts[h].replicas)
+        queues[h][(arrivals[h] // nr) % nr].append(req)
+        arrivals[h] += 1
+
+    def _route(self, requests: List[Request], affinity: List[int],
+               queues: List[List[deque]], arrivals: List[int],
+               pq: List[deque], waiting: List[List]) -> None:
+        """The admission router.  A request whose LEADING prefix block is
+        warm (directory tag matches and the page is home, or the decode
+        host already caches that content) goes straight to its decode
+        host -- suffix-only prefill plus any tail repair is decode-pod
+        work.  A cold leading block means full-prefix prefill: the stream
+        is forwarded to the prefill pod its chain hash names (spilling to
+        a less-loaded pod past ``spill_depth``), the decode host
+        subscribes to the prefix gids, and the stream parks in
+        ``waiting`` until the publish-then-notify wake hands it back."""
+        dirx = self.directory
+        rs = self._route_stats
+        pool = self._prefill_pool
+        for req, d in zip(requests, affinity):
+            host = self.hosts[d]
+            bids, tags = host._prefix_blocks_of(req.prompt)
+            warm = not bids or (
+                int(dirx.tags[bids[0]]) == tags[0]
+                and (dirx.home_ok(bids[0])
+                     or (host._tags[bids[0]] == tags[0]
+                         and host.prefix_engine.kv_ok(bids[0]))))
+            if warm:
+                rs["router_warm_direct"] += 1
+                self._enqueue(queues, arrivals, d, req)
+                continue
+            landed = dirx.subscribe(d, bids, tags)
+            pending = {int(b) for b in bids} - {int(b) for b in landed}
+            if not pending:
+                # raced warm: everything is already home
+                rs["router_warm_direct"] += 1
+                self._enqueue(queues, arrivals, d, req)
+                continue
+            p = pool[tags[0] % len(pool)]
+            if len(pq[p]) >= self.spill_depth:
+                for off in range(1, len(pool)):
+                    q = pool[(tags[0] % len(pool) + off) % len(pool)]
+                    if len(pq[q]) < len(pq[p]):
+                        p = q
+                        rs["router_spills"] += 1
+                        break
+            rs["router_cold_forwards"] += 1
+            pq[p].append(req)
+            waiting.append([req, d, pending, 0])
+
+    def _run_routed(self, requests: List[Request],
+                    affinity: List[int]) -> None:
+        """The disaggregated serving loop: prefill pods burn down their
+        forwarded cold-prefix queues and flush write-behind publishes
+        (firing the notify waves), woken streams hand off to their decode
+        hosts, and the decode/mixed hosts run the ordinary paged
+        scheduler -- all in lockstep ticks on the one directory."""
+        queues = [h._mk_queues([]) for h in self.hosts]
+        arrivals = [0] * len(self.hosts)
+        pq: List[deque] = [deque() for _ in self.hosts]
+        waiting: List[List] = []      # [req, decode_host, pending_gids, age]
+        self._route(requests, affinity, queues, arrivals, pq, waiting)
+        rs = self._route_stats
+        tick = 0
+        while (waiting or any(pq)
+               or any(h._busy(q) for h, q in zip(self.hosts, queues))):
+            for p in self._prefill_pool:
+                if pq[p]:
+                    self.hosts[p].prefill_only_tick(pq[p], tick)
+                    # flush NOW so this tick's notify waves fire and the
+                    # decode pods can admit next tick, not eventually
+                    self.directory.flush_deferred(p)
+            for d in {w[1] for w in waiting}:
+                got = set(self.directory.pop_notifications(d))
+                if got:
+                    for w in waiting:
+                        if w[1] == d:
+                            w[2] -= got
+            for w in list(waiting):
+                req, d, pending, age = w
+                if pending and age < self.handoff_patience:
+                    w[3] += 1
+                    continue
+                if pending:
+                    # a publish was dropped (collision re-tag, version
+                    # race): force the admission rather than hang; any
+                    # cold prefill it causes lands in the decode pod's
+                    # role ledger where the smoke can see it
+                    rs["router_forced_admissions"] += 1
+                else:
+                    rs["router_handoffs"] += 1
+                waiting.remove(w)
+                self._enqueue(queues, arrivals, d, req)
+            for h, host in enumerate(self.hosts):
+                if host.role != "prefill":
+                    host._paged_tick(queues[h], tick)
+            self._maybe_rebase_all()
+            tick += 1
+        self.directory.flush_deferred()    # drain write-behind payloads
+
+    # config-like report keys: identical on every host by construction,
+    # so the aggregate reports them ONCE (and asserts the fleet agrees)
+    # instead of summing them like traffic counters.
+    _CONFIG_KEYS = ("ts_bits", "kv_lease", "n_prefix_blocks",
+                    "kv_pool_stacks")
+    # high-water marks: the fleet-wide value is the max, not the sum.
+    _MAX_KEYS = ("pool_page_peak", "directory_peak_sharers")
+    # per-host breakout columns (the smokes grep host{h}_* rows).
+    _PER_HOST_KEYS = ("prefix_prefill_tokens_skipped", "prefix_flops_saved",
+                      "prefix_block_hits", "xhost_pages_fetched",
+                      "xhost_pages_published", "role_cold_prefills",
+                      "role_suffix_admissions", "role_pages_published",
+                      "role_prefill_jobs", "role_renewal_msgs",
+                      "decode_renewals", "decode_ticks")
 
     def coherence_report(self) -> Dict[str, Any]:
-        """Per-host reports summed, per-host reuse counters broken out
-        (the smoke asserts host K-1 skipped prefill flops), and the
-        directory's cross-host ledger merged in."""
+        """Per-host traffic counters summed, config scalars reported once,
+        high-water marks maxed, per-role/per-host counters broken out
+        (the smokes assert host K-1 skipped prefill flops and a decode
+        pod did zero cold prefills), and the directory's cross-host
+        ledger merged in."""
         agg: Dict[str, Any] = {}
-        for h, host in enumerate(self.hosts):
-            rep = host.coherence_report()
+        reports = [host.coherence_report() for host in self.hosts]
+        for k in self._CONFIG_KEYS:
+            vals = {rep[k] for rep in reports if k in rep}
+            if len(vals) > 1:
+                raise RuntimeError(
+                    f"hosts disagree on config scalar {k!r}: {sorted(vals)}")
+            if vals:
+                agg[k] = vals.pop()
+        for h, rep in enumerate(reports):
             for k, v in rep.items():
-                if isinstance(v, (int, np.integer)) \
+                if k in self._CONFIG_KEYS or k == "role":
+                    continue
+                if k in self._MAX_KEYS:
+                    agg[k] = max(agg.get(k, 0), int(v))
+                elif isinstance(v, (int, np.integer)) \
                         and not isinstance(v, bool):
                     agg[k] = agg.get(k, 0) + int(v)
                 elif k not in agg:
                     agg[k] = v
-            for k in ("prefix_prefill_tokens_skipped", "prefix_flops_saved",
-                      "prefix_block_hits", "xhost_pages_fetched",
-                      "xhost_pages_published"):
+            agg[f"host{h}_role"] = rep["role"]
+            for k in self._PER_HOST_KEYS:
                 agg[f"host{h}_{k}"] = rep[k]
+        agg["roles"] = ",".join(rep["role"] for rep in reports)
         agg["n_hosts"] = len(self.hosts)
+        agg.update(self._route_stats)
         agg.update(self.directory.report())
         return agg

@@ -1,0 +1,235 @@
+"""Disaggregated prefill/decode serving over the sharded directory.
+
+The tentpole claims, each asserted here:
+  * a decode pod performs ZERO cold-prefix prefills -- the router forwards
+    cold work to a prefill pod and hands the stream back after the
+    publish-then-notify wake;
+  * the handed-back stream serves suffix-only from migrated pages,
+    token-identical to a single-host cluster;
+  * the split keeps the directory's guarantees: zero multicasts, zero
+    invalidation messages, <=1 message pair per contacted shard per wave.
+
+Plus the PR's reporting/affinity bugfixes: config scalars reported once
+(not summed across hosts), high-water marks maxed, ``publish_weights``
+returning the fleet max with a version-consensus check, and ``affinity``
+validated up front.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.models import init_params
+from repro.runtime import MultiHostServingCluster, Request, ServingCluster
+
+KW = dict(n_replicas=1, prefix_block_tokens=4, kv_lease=16,
+          cache_len=96, selfinc_period=4, n_decode_pages=64,
+          max_pages=16, max_batch=2)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced(get_arch("tinyllama-1.1b"), n_layers=2, d_model=64,
+                   vocab=128)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+def _requests(cfg, n, shared=12, tail=6, max_new=2, seed=0):
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, cfg.vocab, shared).astype(np.int32)
+    return [Request(i, np.concatenate(
+        [system, rng.integers(1, cfg.vocab, tail).astype(np.int32)]),
+        max_new=max_new) for i in range(n)]
+
+
+def _single_host_reference(cfg, params, reqs_fn, **kw):
+    single = ServingCluster(cfg, lambda: params, **dict(KW, **kw))
+    sreqs = reqs_fn()
+    single.run(sreqs)
+    return sreqs
+
+
+def _assert_same_tokens(reqs, sreqs):
+    for a, b in zip(reqs, sreqs):
+        assert a.done and b.done
+        np.testing.assert_array_equal(np.asarray(a.output),
+                                      np.asarray(b.output),
+                                      err_msg=f"request {a.rid}")
+
+
+# ---------------------------------------------------------------------------
+# Role plumbing validation
+# ---------------------------------------------------------------------------
+
+def test_roles_validation(cfg, params):
+    with pytest.raises(ValueError, match="unknown roles"):
+        MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                roles=["prefill", "deocde"], **KW)
+    with pytest.raises(ValueError, match="entries for"):
+        MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                roles=["mixed"], **KW)
+    with pytest.raises(ValueError, match="forward cold prefixes"):
+        MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                roles=["decode", "decode"], **KW)
+    with pytest.raises(ValueError, match="hand streams back"):
+        MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                roles=["prefill", "prefill"], **KW)
+
+
+def test_affinity_validation(cfg, params):
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=2, **KW)
+    reqs = _requests(cfg, 2)
+    with pytest.raises(ValueError, match="out of range"):
+        mh.run(reqs, affinity=[0, 2])
+    with pytest.raises(ValueError, match="negative ids do not wrap"):
+        mh.run(reqs, affinity=[0, -1])
+    with pytest.raises(ValueError, match="entries for"):
+        mh.run(reqs, affinity=[0])
+    assert not any(r.done for r in reqs)   # validation precedes serving
+
+    dis = MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                  roles=["prefill", "decode"], **KW)
+    with pytest.raises(ValueError, match="prefill-only"):
+        dis.run(_requests(cfg, 2), affinity=[0, 1])
+
+
+# ---------------------------------------------------------------------------
+# Reporting bugfixes: scalars once, maxes maxed, publish consensus
+# ---------------------------------------------------------------------------
+
+def test_report_config_scalars_not_summed(cfg, params):
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                 sanitize=True, **KW)
+    reqs = _requests(cfg, 4)
+    _, rep = mh.run(reqs)
+    eng = mh.hosts[0].prefix_engine
+    # the old aggregation summed these across hosts (2x the real value)
+    assert rep["ts_bits"] == eng.ts_bits
+    assert rep["kv_lease"] == eng.lease
+    assert rep["n_prefix_blocks"] == mh.hosts[0].n_prefix_blocks
+    assert rep["pool_page_peak"] == max(
+        h.prefix_stats["pool_page_peak"] for h in mh.hosts)
+    assert rep["roles"] == "mixed,mixed"
+    assert rep["host0_role"] == "mixed"
+
+
+def test_publish_weights_returns_fleet_max_and_agrees(cfg, params):
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=2, **KW)
+    pts = mh.publish_weights(params)
+    assert pts == max(h.publisher.pts for h in mh.hosts)
+    vers = {h.store.versions()["params"] for h in mh.hosts}
+    assert len(vers) == 1
+    # desynchronize one host's store: the consensus check must trip
+    mh.hosts[1].publisher.write("params", params,
+                                nbytes=mh.hosts[1].param_bytes)
+    with pytest.raises(RuntimeError, match="disagree"):
+        mh.publish_weights(params)
+
+
+# ---------------------------------------------------------------------------
+# The tentpole: 1 prefill pod + 1 decode pod
+# ---------------------------------------------------------------------------
+
+def test_disagg_decode_pod_never_cold_prefills(cfg, params):
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                 roles=["prefill", "decode"],
+                                 sanitize=True, **KW)
+    reqs = _requests(cfg, 4)
+    _, rep = mh.run(reqs)             # default affinity: the decode pod
+    # the disaggregation contract
+    assert rep["host1_role_cold_prefills"] == 0
+    assert rep["host0_role_prefill_jobs"] > 0
+    assert rep["host0_role_pages_published"] > 0
+    assert rep["host1_prefix_prefill_tokens_skipped"] > 0
+    assert rep["host1_xhost_pages_fetched"] > 0
+    assert rep["host1_role_suffix_admissions"] == len(reqs)
+    # the router actually routed: cold forwards woke back as handoffs
+    assert rep["router_cold_forwards"] > 0
+    assert rep["router_handoffs"] == rep["router_cold_forwards"]
+    assert rep["router_forced_admissions"] == 0
+    assert rep["xhost_watches"] > 0
+    assert rep["xhost_notifies"] > 0
+    # the directory's guarantees survive the split
+    assert rep["xhost_multicasts"] == 0
+    assert rep["xhost_invalidation_msgs"] == 0
+    # decode-pod steady-state lease traffic: batched data-less renewals
+    assert rep["host1_decode_ticks"] > 0
+    _assert_same_tokens(reqs, _single_host_reference(
+        cfg, params, lambda: _requests(cfg, 4)))
+
+
+def test_disagg_wave_budget_holds(cfg, params):
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                 roles=["prefill", "decode"],
+                                 sanitize=True, **KW)
+    mh.run(_requests(cfg, 4))
+    # every logged exchange -- waves, flushes, watches, notifies -- stays
+    # within one request + one response per contacted remote shard
+    for w in mh.directory.wave_log:
+        shards = w.get("remote_shards")
+        if shards is None:
+            shards = len(w.get("shards", ()))
+        assert w["msgs"] <= 2 * max(1, shards), w
+
+
+def test_disagg_warm_prefix_goes_straight_to_decode(cfg, params):
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=2,
+                                 roles=["prefill", "decode"],
+                                 sanitize=True, **KW)
+    mh.run(_requests(cfg, 2))
+    cold = mh._route_stats["router_cold_forwards"]
+    assert cold > 0
+    # same prefix again: now home in the directory, no forward needed
+    _, rep = mh.run(_requests(cfg, 2))
+    assert rep["router_cold_forwards"] == cold
+    assert rep["router_warm_direct"] >= 2
+    assert rep["host1_role_cold_prefills"] == 0
+
+
+def test_disagg_mixed_fleet_prefers_pure_prefill_pods(cfg, params):
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=3,
+                                 roles=["prefill", "decode", "mixed"],
+                                 sanitize=True, **KW)
+    assert mh._prefill_pool == [0]
+    reqs = _requests(cfg, 4)
+    _, rep = mh.run(reqs)
+    assert rep["host1_role_cold_prefills"] == 0
+    assert rep["host2_role_cold_prefills"] == 0
+    assert rep["host0_role_prefill_jobs"] > 0
+    _assert_same_tokens(reqs, _single_host_reference(
+        cfg, params, lambda: _requests(cfg, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Randomized mixed-affinity fleet with a forced mid-run rebase
+# ---------------------------------------------------------------------------
+
+def test_randomized_affinity_with_midrun_rebase(cfg, params):
+    kw = dict(KW, ts_bits=4, max_batch=4)      # 4-bit guard: rebases fire
+    mh = MultiHostServingCluster(cfg, lambda: params, n_hosts=3,
+                                 sanitize=True, **kw)
+
+    def mk():
+        rng = np.random.default_rng(7)
+        sys_a = rng.integers(1, cfg.vocab, 12).astype(np.int32)
+        sys_b = rng.integers(1, cfg.vocab, 12).astype(np.int32)
+        # long enough that per-host timestamps walk past the 4-bit guard
+        return [Request(i, np.concatenate(
+            [sys_a if i % 2 == 0 else sys_b,
+             rng.integers(1, cfg.vocab, 6).astype(np.int32)]),
+            max_new=8) for i in range(24)]
+
+    reqs = mk()
+    affinity = np.random.default_rng(11).integers(
+        0, 3, len(reqs)).tolist()
+    _, rep = mh.run(reqs, affinity=affinity)
+    assert rep["xhost_rebases"] > 0            # the rebase really fired
+    assert rep["xhost_multicasts"] == 0
+    assert rep["xhost_invalidation_msgs"] == 0
+    _assert_same_tokens(reqs, _single_host_reference(
+        cfg, params, mk, ts_bits=4, max_batch=4))

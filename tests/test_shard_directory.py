@@ -180,6 +180,47 @@ def test_pending_publishes_ride_the_next_wave():
     assert d.stats.flits > flits_before + 2    # payload flits were charged
 
 
+def test_subscribe_notifies_on_publish_install():
+    d = _mk(pools=True)
+    d.wave(0, 0, write_bids=[1, 2], write_tags=[9, 8])
+    d.defer_publish(0, 1, _page(3.0))
+    d.defer_publish(0, 2, _page(4.0))
+    landed = d.subscribe(1, [1, 2], tags=[9, 8])
+    assert landed == [] and d.stats.watches == 2
+    assert d.pop_notifications(1) == []        # nothing landed yet
+    d.flush_deferred(0)                        # installs fire the notify
+    assert sorted(d.pop_notifications(1)) == [1, 2]
+    assert d.stats.notifies == 2
+    assert d.pop_notifications(1) == []        # drained exactly once
+    # watch + notify exchanges stay inside the per-shard message budget
+    for w in d.wave_log:
+        if w["kind"] in ("watch", "notify"):
+            assert w["msgs"] <= 2 * max(1, len(w["shards"]))
+
+
+def test_subscribe_returns_already_home_gids_without_watching():
+    d = _mk(pools=True)
+    d.wave(0, 0, write_bids=[3], write_tags=[7])
+    d.defer_publish(0, 3, _page(1.0))
+    d.flush_deferred(0)
+    watches = d.stats.watches
+    msgs = d.stats.msgs
+    assert d.subscribe(1, [3], tags=[7]) == [3]
+    assert d.stats.watches == watches          # no watch registered
+    assert d.stats.msgs == msgs                # and no messages priced
+
+
+def test_subscribe_tag_mismatch_drops_notify():
+    d = _mk(pools=True)
+    d.wave(0, 0, write_bids=[2], write_tags=[5])
+    assert d.subscribe(1, [2], tags=[4]) == []  # wants DIFFERENT content
+    d.defer_publish(0, 2, _page(2.0))
+    d.flush_deferred(0)                        # tag-5 content lands
+    assert d.pop_notifications(1) == []        # stale watch never fires
+    with pytest.raises(ValueError, match="align"):
+        d.subscribe(1, [2], tags=[4, 5])
+
+
 def test_maybe_rebase_shifts_all_shards_uniformly():
     d = ShardedLeaseDirectory(N_BLOCKS, N_SHARDS, n_hosts=2, lease=LEASE,
                               ts_bits=8, sanitize=True)
