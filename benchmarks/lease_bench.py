@@ -307,47 +307,78 @@ def bench_directory(n_blocks: int, iters: int):
     # 8-block prefix, the decode pod (host 1) subscribes, gets the
     # publish-then-notify wake, migrates the pages once, then idles in
     # steady state -- its per-tick lease traffic is batched data-less
-    # renewals only.  All message ledgers, fully deterministic.
-    dd = ShardedLeaseDirectory(n_blocks, 2, n_hosts=2, lease=16,
-                               kv_pools={"kv": (1, 16)},
-                               kv_dtype=np.float32, block_bytes=64)
-    bids = list(range(8))
-    res = dd.wave(0, 0, write_bids=bids, tag_writes_with_ts=True)
-    handoff0 = dd.stats.msgs
-    assert dd.subscribe(1, bids) == []         # cold: watch, don't poll
-    for b in bids:
-        dd.defer_publish(0, b, {"kv": np.zeros((1, 1, 16), np.float32)})
-    dd.flush_deferred(0)                       # fires the notify wave
-    woken = sorted(dd.pop_notifications(1))
-    res = dd.wave(1, int(res.new_pts), read_groups=[bids],
-                  fetch_bids=bids)
-    handoff_msgs = dd.stats.msgs - handoff0
-    pts = int(res.new_pts)
-    leases = dict(res.leases)
-    ticks, renew_waves, msgs0 = 64, 0, dd.stats.msgs
-    for _ in range(ticks):
-        pts += 1                               # one decode step
-        expired = {b: leases[b][0] for b in bids if pts > leases[b][1]}
-        if expired:
-            r2 = dd.wave(1, pts, read_groups=[list(expired)],
-                         req_wts=expired)
-            pts = int(r2.new_pts)
-            leases.update(r2.leases)
-            renew_waves += 1
-    decode_msgs = dd.stats.msgs - msgs0
-    out["disagg"] = {
-        "blocks": len(bids), "woken": len(woken),
-        "handoff_msgs": handoff_msgs,
-        "decode_ticks": ticks, "renew_waves": renew_waves,
-        "decode_msgs": decode_msgs,
-        "decode_msgs_per_tick": decode_msgs / ticks,
-        "multicasts": dd.stats.multicasts,
-        "invalidation_msgs": dd.stats.invalidation_msgs}
-    print(f"# dir_disagg: {len(woken)}/{len(bids)} pages woke the decode "
-          f"pod ({handoff_msgs} hand-off msgs), then {decode_msgs} msgs "
-          f"over {ticks} decode ticks "
-          f"({out['disagg']['decode_msgs_per_tick']:.4f} msgs/tick, "
-          f"{renew_waves} renewal waves, {dd.stats.multicasts} multicasts)")
+    # renewals only.  All message ledgers, fully deterministic.  Replayed
+    # three ways: the static-SC baseline, and the Tardis 2.0 lanes --
+    # adaptive per-block leases under SC (renewal waves thin out as the
+    # predictor learns the blocks are read-only) and under TSO (the decode
+    # pod serves tag-checked expired copies with no renewal at all).
+    def _disagg_replay(policy, ticks):
+        kw = dict(kv_pools={"kv": (1, 16)}, kv_dtype=np.float32,
+                  block_bytes=64)
+        if policy is None:
+            dd = ShardedLeaseDirectory(n_blocks, 2, n_hosts=2, lease=16,
+                                       **kw)
+        else:
+            dd = ShardedLeaseDirectory(n_blocks, 2, n_hosts=2,
+                                       policy=policy, **kw)
+        skip = policy.skip_expired_renewal() if policy else False
+        bids = list(range(8))
+        res = dd.wave(0, 0, write_bids=bids, tag_writes_with_ts=True)
+        handoff0 = dd.stats.msgs
+        assert dd.subscribe(1, bids) == []     # cold: watch, don't poll
+        for b in bids:
+            dd.defer_publish(0, b, {"kv": np.zeros((1, 1, 16), np.float32)})
+        dd.flush_deferred(0)                   # fires the notify wave
+        woken = sorted(dd.pop_notifications(1))
+        res = dd.wave(1, int(res.new_pts), read_groups=[bids],
+                      fetch_bids=bids)
+        handoff_msgs = dd.stats.msgs - handoff0
+        pts = int(res.new_pts)
+        leases = dict(res.leases)
+        renew_waves, skipped, msgs0 = 0, 0, dd.stats.msgs
+        for _ in range(ticks):
+            pts += 1                           # one decode step
+            expired = {b: leases[b][0] for b in bids
+                       if pts > leases[b][1]}
+            if expired and skip:
+                # tso/rc: the copies are tag-checked and read-only --
+                # serve them locally, no renewal round-trip, no pts move
+                skipped += len(expired)
+            elif expired:
+                r2 = dd.wave(1, pts, read_groups=[list(expired)],
+                             req_wts=expired)
+                pts = int(r2.new_pts)
+                leases.update(r2.leases)
+                renew_waves += 1
+        decode_msgs = dd.stats.msgs - msgs0
+        return {
+            "blocks": len(bids), "woken": len(woken),
+            "consistency": policy.consistency if policy else "sc",
+            "predictor": bool(policy and policy.predictor),
+            "handoff_msgs": handoff_msgs,
+            "decode_ticks": ticks, "renew_waves": renew_waves,
+            "renewals_skipped": skipped,
+            "decode_msgs": decode_msgs,
+            "decode_msgs_per_tick": decode_msgs / ticks,
+            "pred_lease_hi": int(dd.pred_lease.max()),
+            "multicasts": dd.stats.multicasts,
+            "invalidation_msgs": dd.stats.invalidation_msgs}
+
+    from repro.core import CoherencePolicy
+    out["disagg"] = _disagg_replay(None, 64)
+    out["disagg_pred_sc"] = _disagg_replay(
+        CoherencePolicy(consistency="sc", lease=16, predictor=True), 256)
+    out["disagg_pred_tso"] = _disagg_replay(
+        CoherencePolicy(consistency="tso", lease=16, predictor=True), 256)
+    for name in ("disagg", "disagg_pred_sc", "disagg_pred_tso"):
+        dg = out[name]
+        print(f"# dir_{name}: {dg['woken']}/{dg['blocks']} pages woke the "
+              f"decode pod ({dg['handoff_msgs']} hand-off msgs), then "
+              f"{dg['decode_msgs']} msgs over {dg['decode_ticks']} decode "
+              f"ticks ({dg['decode_msgs_per_tick']:.4f} msgs/tick, "
+              f"{dg['renew_waves']} renewal waves, "
+              f"{dg['renewals_skipped']} renewals skipped, "
+              f"{dg['multicasts']} multicasts)")
     return out
 
 
@@ -472,6 +503,14 @@ def tracked_ratios(out):
         if dg:
             r["dir_decode_msgs_per_tick"] = (
                 dg["decode_msgs_per_tick"], False, CHECK_TOLERANCE)
+        # Tardis 2.0 replays: adaptive leases must keep thinning the
+        # decode pod's renewal traffic (sc), and tso must keep it at
+        # zero -- any new message past tolerance is a protocol change
+        for suffix in ("pred_sc", "pred_tso"):
+            dg = d.get(f"disagg_{suffix}")
+            if dg:
+                r[f"dir_decode_renewal_msgs_per_tick/{suffix}"] = (
+                    dg["decode_msgs_per_tick"], False, CHECK_TOLERANCE)
     return r
 
 

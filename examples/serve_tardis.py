@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
+from repro.core import CONSISTENCY_MODELS, CoherencePolicy
 from repro.models import init_params
 from repro.runtime import Request, ServingCluster
 
@@ -38,6 +39,12 @@ def main():
     ap.add_argument("--prefix-block", type=int, default=8,
                     help="tokens per leased prefix-KV block")
     ap.add_argument("--no-prefix-reuse", action="store_true")
+    ap.add_argument("--consistency", choices=CONSISTENCY_MODELS,
+                    default="sc",
+                    help="prefix-KV memory model (tso/rc skip renewals of "
+                         "expired read-only leases)")
+    ap.add_argument("--predictor", action="store_true",
+                    help="adaptive (Tardis 2.0) per-block lease prediction")
     ap.add_argument("--check", action="store_true",
                     help="assert the LeaseEngine prefix path fired (CI)")
     args = ap.parse_args()
@@ -49,10 +56,12 @@ def main():
     print(f"model: {cfg.name}-reduced {args.layers}L d={args.d_model} "
           f"({sum(p.size for p in jax.tree.leaves(params))/1e6:.1f}M params)")
 
+    policy = CoherencePolicy(consistency=args.consistency, lease=16,
+                             predictor=args.predictor)
     cluster = ServingCluster(cfg, lambda: params,
                              n_replicas=args.replicas, lease=8,
                              prefix_block_tokens=args.prefix_block,
-                             kv_lease=16,
+                             policy=policy,
                              prefix_reuse=not args.no_prefix_reuse,
                              cache_len=96, selfinc_period=4,
                              max_batch=3)

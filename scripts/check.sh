@@ -24,10 +24,14 @@ if [ -z "${REPRO_SKIP_FAST_LANE:-}" ]; then
     fi
     # bounded exhaustive model check: Tables I-III close under
     # 2 cores / 1 block with every transition cross-validated against
-    # core.protocol and the LeaseEngine numpy mirror (seconds)
+    # core.protocol and the LeaseEngine numpy mirror (seconds); the tso
+    # lane re-closes the space with the store->load relaxation admitted
+    # (stale-read windows the weaker model permits must stay bounded)
     python scripts/model_check.py --cores 2 --blocks 1 --lease 2 --ts-bits 2
+    python scripts/model_check.py --cores 2 --blocks 1 --lease 2 --ts-bits 2 \
+        --consistency tso
     python -m pytest -q tests/test_litmus.py tests/test_lease_engine.py \
-        tests/test_model_check.py
+        tests/test_model_check.py tests/test_coherence_policy.py
 fi
 
 python -m pytest -x -q "$@"

@@ -27,6 +27,12 @@ def main(argv=None) -> int:
     ap.add_argument("--lease", type=int, default=2)
     ap.add_argument("--ts-bits", type=int, default=2,
                     help="rebase threshold exponent (bounds the ts domain)")
+    ap.add_argument("--consistency", choices=("sc", "tso", "rc"),
+                    default="sc",
+                    help="forbidden-outcome predicates to enforce over the "
+                    "same state graph: sc = all load checks, tso waives the "
+                    "beyond-lease-end check, rc also waives the stale-"
+                    "inside-newer-interval check")
     ap.add_argument("--no-self-inc", action="store_true",
                     help="disable spontaneous pts advance")
     ap.add_argument("--no-pw-opt", action="store_true",
@@ -44,7 +50,8 @@ def main(argv=None) -> int:
                  lease=args.lease, ts_bits=args.ts_bits,
                  self_inc=not args.no_self_inc,
                  pw_opt=not args.no_pw_opt,
-                 symmetry=not args.no_symmetry)
+                 symmetry=not args.no_symmetry,
+                 consistency=args.consistency)
     model = TardisModel(cfg)
     bridge = None if args.no_bridge else Bridge(cfg.lease)
     res = explore(model, bridge=bridge, max_states=args.max_states)

@@ -58,7 +58,21 @@ _LLC_NAME = {0: "DRAM", 1: "S", 2: "E"}
 
 @dataclass(frozen=True)
 class Config:
-    """Bounded model configuration."""
+    """Bounded model configuration.
+
+    ``consistency`` picks the forbidden-outcome predicates evaluated over
+    the SAME enumerated state graph (transitions never change):
+
+      * ``sc``  -- all three load checks (value-ts lower bound, no stale
+        value inside a newer version's interval, never past the lease end),
+      * ``tso`` -- the store->load relaxation: a load may act as if ordered
+        at a timestamp inside its lease even when the core's own
+        program-earlier stores/ticks pushed pts past the lease end, so the
+        "beyond the serving lease end" check is waived,
+      * ``rc``  -- additionally waives the stale-inside-newer-interval
+        check (loads may reorder with program-earlier loads); only the
+        per-location value-ts lower bound remains.
+    """
     n_cores: int = 2
     n_blocks: int = 1
     lease: int = 2
@@ -66,6 +80,7 @@ class Config:
     self_inc: bool = True     # cores may advance pts spontaneously
     pw_opt: bool = True       # section IV-C private-write optimization
     symmetry: bool = True     # quotient by core/block permutations
+    consistency: str = "sc"   # sc | tso | rc (see above)
 
     @property
     def threshold(self) -> int:
@@ -297,7 +312,13 @@ class TardisModel:
                     serve_rts):
         """A load at pts must return the version whose [wts, rts] interval
         contains it: the serving version's creation stamp is <= new_pts and,
-        if a newer version exists, its creation stamp is strictly above."""
+        if a newer version exists, its creation stamp is strictly above.
+
+        ``cfg.consistency`` waives the checks the weaker memory model does
+        not require (the relaxed forbidden-outcome predicates over the same
+        enumerated graph; see :class:`Config`).
+        """
+        model = getattr(self.cfg, "consistency", "sc")
         if not (0 <= ver < len(vers_a)):
             info.violations.append(
                 f"{info.rule}: served version id {ver} out of range")
@@ -306,12 +327,13 @@ class TardisModel:
             info.violations.append(
                 f"{info.rule}: load observed pts {new_pts} below the served "
                 f"version's creation wts {vers_a[ver]} (value-ts)")
-        if ver + 1 < len(vers_a) and new_pts >= vers_a[ver + 1]:
+        if model in ("sc", "tso") and ver + 1 < len(vers_a) \
+                and new_pts >= vers_a[ver + 1]:
             info.violations.append(
                 f"{info.rule}: load at pts {new_pts} returned a version "
                 f"superseded at wts {vers_a[ver + 1]} (value-ts: stale value "
                 f"served inside a newer version's validity interval)")
-        if new_pts > serve_rts:
+        if model == "sc" and new_pts > serve_rts:
             info.violations.append(
                 f"{info.rule}: load consumed pts {new_pts} beyond the "
                 f"serving lease end rts {serve_rts}")
@@ -625,6 +647,11 @@ class TardisModel:
         bound = cfg.threshold + cfg.lease
         if not all(0 <= p <= bound for p in pts) or not 0 <= mts <= bound:
             bad.append(f"timestamp out of bounds [0, {bound}]")
+        # Tardis 2.0 lease-horizon: every granted lease end stays within one
+        # lease of the system's progress frontier (mts is in the frontier
+        # because LLC eviction folds line rts into it).  An over-predicting
+        # lease extension rule breaks this on its first grant.
+        horizon = max(max(pts), mts) + cfg.lease
         for a in range(cfg.n_blocks):
             V = vers[a]
             latest = len(V) - 1
@@ -655,6 +682,10 @@ class TardisModel:
                     bad.append(f"block {a}: llc wts {gw} > rts {gr}")
                 if not (0 <= gw and gr <= bound):
                     bad.append(f"block {a}: llc ts out of bounds")
+                if gr > horizon:
+                    bad.append(f"block {a}: llc rts {gr} above the lease "
+                               f"horizon {horizon} (over-predicted lease "
+                               f"extension)")
             for i in range(cfg.n_cores):
                 st, w, r, v = lines[i][a]
                 if st == INVALID:
@@ -663,6 +694,10 @@ class TardisModel:
                     bad.append(f"core {i} block {a}: wts {w} > rts {r}")
                 if not (0 <= w and r <= bound):
                     bad.append(f"core {i} block {a}: ts out of bounds")
+                if r > horizon:
+                    bad.append(f"core {i} block {a}: line rts {r} above the "
+                               f"lease horizon {horizon} (over-predicted "
+                               f"lease extension)")
                 if not 0 <= v <= latest:
                     bad.append(f"core {i} block {a}: version id {v} "
                                f"out of range")

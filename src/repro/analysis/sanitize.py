@@ -11,6 +11,9 @@ state and asserts, in numpy (one vectorized pass, no per-block Python):
     (the uniform shift+clamp preserves relative order by construction --
     anything else is flagged),
   * a reader's program timestamp never decreases,
+  * a read's lease extension never grants past ``max(wts, pts) +
+    lease_max`` (the Tardis 2.0 predictor's hard cap -- an over-predicting
+    predictor trips here),
   * a write stamps ``wts = rts = ts`` with the exact Table I jump-ahead
     ``ts = max(pts, max(masked rts) + 1)``,
   * the KV validity bitmap equals the shadow of published-minus-evicted
@@ -116,6 +119,17 @@ class LeaseSanitizer:
                 self._fail(op, f"reader pts decreased: {pts} -> {new_pts}")
             if (wts != self.prev_wts).any():
                 self._fail(op, "a read moved wts")
+            # Tardis 2.0 lease cap: no extension (predicted or static) may
+            # grant past max(wts, pts) + lease_max -- an over-predicted
+            # lease would let stale reads linger arbitrarily long
+            cap = int(getattr(engine, "lease_max", engine.lease))
+            bound = np.maximum(self.prev_rts,
+                               np.maximum(wts, int(pts.max())) + cap)
+            bad = np.flatnonzero(rts > bound)
+            if bad.size:
+                self._fail(op, f"over-predicted lease: rts exceeds "
+                           f"max(prev_rts, max(wts, pts) + lease_max "
+                           f"= {cap}) at blocks {bad[:8].tolist()}")
         elif op == "write":
             idx = np.asarray(info["idx"])
             ts = int(info["ts"])

@@ -15,12 +15,14 @@ Layers:
 """
 from .geometry import Geometry
 from .lease_engine import LeaseEngine, LeaseStats, ReadManyResult, ReadResult
+from .policy import CONSISTENCY_MODELS, CoherencePolicy
 from .shard_directory import (DirStats, DirWaveResult, FetchedPage,
                               NumpyTransport, ShardedLeaseDirectory)
 from .simulator import SimConfig, SimResult, simulate
 from .traces import Trace, make_trace, TRACE_GENERATORS
 
-__all__ = ["DirStats", "DirWaveResult", "FetchedPage", "Geometry",
+__all__ = ["CONSISTENCY_MODELS", "CoherencePolicy", "DirStats",
+           "DirWaveResult", "FetchedPage", "Geometry",
            "LeaseEngine", "LeaseStats", "NumpyTransport", "ReadManyResult",
            "ReadResult", "ShardedLeaseDirectory", "SimConfig", "SimResult",
            "simulate", "Trace", "make_trace", "TRACE_GENERATORS"]

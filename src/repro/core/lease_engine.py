@@ -83,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import protocol, timestamps
+from .policy import CoherencePolicy
 from ..kernels.tardis_lease import ops as lease_ops
 
 
@@ -124,6 +125,8 @@ class LeaseStats:
     kv_tokens_appended: int = 0  # single token rows appended into pages
     pages_allocated: int = 0     # free-list pops (decode page churn)
     pages_freed: int = 0         # free-list pushes
+    pred_grows: int = 0          # predictor: leases grown (wasted renewal)
+    pred_shrinks: int = 0        # predictor: leases shrunk (write hit)
     # per-stack occupancy: token rows appended into each named pool's
     # segment (a full-row append feeds every stack at once)
     kv_pool_tokens: Dict[str, int] = dataclasses.field(default_factory=dict)
@@ -171,6 +174,7 @@ class LeaseEngine:
     """
 
     def __init__(self, n_blocks: int, lease: int = 64, *,
+                 policy: Optional[CoherencePolicy] = None,
                  backend: str = "pallas", ts_bits: int = 30,
                  block_bytes: int = 0, interpret: Optional[bool] = None,
                  kv_block_shape: Optional[Sequence[int]] = None,
@@ -179,11 +183,21 @@ class LeaseEngine:
                  sanitize: Optional[bool] = None):
         if backend not in ("pallas", "numpy"):
             raise ValueError(f"unknown backend {backend!r}")
+        # ``policy`` is the one configuration object (CoherencePolicy);
+        # the loose ``lease``/``ts_bits`` kwargs remain as the legacy
+        # spelling and fold into a static-SC policy when no policy is given.
+        if policy is None:
+            policy = CoherencePolicy(lease=int(lease), ts_bits=int(ts_bits))
+        self.policy = policy
         self.n_blocks = int(n_blocks)
-        self.lease = int(lease)
+        self.lease = int(policy.lease)
         self.backend = backend
-        self.ts_bits = int(ts_bits)
+        self.ts_bits = int(policy.ts_bits)
         self.block_bytes = int(block_bytes)
+        # Tardis 2.0 per-block predicted leases (ts DELTAS, so a uniform
+        # rebase never touches them); with the predictor off the vector
+        # stays pinned at the static lease and the scalar fast path runs.
+        self._pred_lease = np.full(self.n_blocks, policy.lease, np.int32)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = bool(interpret)
@@ -268,6 +282,35 @@ class LeaseEngine:
     def sanitize_checks(self) -> int:
         """Transitions checked by the sanitizer (0 when it is off)."""
         return self._san.checks if self._san is not None else 0
+
+    @property
+    def lease_max(self) -> int:
+        """Hard upper bound on any lease this engine may grant (== the
+        static lease when the predictor is off) -- the sanitizer's cap."""
+        return self.policy.lease_max
+
+    @property
+    def pred_lease(self) -> np.ndarray:
+        """Per-block predicted leases (pinned at ``lease`` when the
+        predictor is off).  Values are timestamp DELTAS: rebases never
+        touch them."""
+        return self._pred_lease
+
+    def set_pred_lease(self, idx, values) -> None:
+        """Install predictor state for blocks (page migration / baseline
+        sync: the prediction travels with the block)."""
+        idx = np.atleast_1d(np.asarray(idx, np.int64))
+        vals = np.broadcast_to(np.asarray(values, np.int32), idx.shape)
+        self._pred_lease[idx] = np.clip(vals, self.policy.lease_min,
+                                        self.policy.lease_max)
+
+    def _lease_arg(self):
+        """The lease operand for a lease pass: the per-block predicted
+        vector under the predictor, else the static scalar (the kernels
+        broadcast either)."""
+        if self.policy.predictor:
+            return self._pred_lease
+        return np.int32(self.lease)
 
     def set_tables(self, wts, rts) -> None:
         """Verification seam: load externally computed ``(wts, rts)`` tables.
@@ -640,7 +683,7 @@ class LeaseEngine:
         if self.backend == "pallas":
             out = lease_ops.masked_lease_check(
                 self._wts, self._rts, jnp.asarray(req), jnp.asarray(mask),
-                np.int32(pts), np.int32(self.lease),
+                np.int32(pts), self._lease_arg(),
                 interpret=self.interpret)
             self._rts = out["new_rts"]
             expired, renew_ok, wts_at, rts_at = (np.asarray(x) for x in
@@ -649,10 +692,11 @@ class LeaseEngine:
             new_pts = int(out["new_pts"])
         else:
             m = mask.astype(bool)
+            lv = self._lease_arg()
             expired_f = m & (pts > self._rts)
             renew_f = m & (req == self._wts)
-            ext = np.maximum(np.maximum(self._rts, self._wts + self.lease),
-                             np.int32(pts + self.lease))
+            ext = np.maximum(np.maximum(self._rts, self._wts + lv),
+                             np.int32(pts) + lv)
             consumed = np.where(m & (pts <= self._rts), self._wts, 0)
             self._rts = np.where(m, ext, self._rts).astype(np.int32)
             expired = expired_f[idx]
@@ -678,6 +722,20 @@ class LeaseEngine:
         # SH_REP: header + timestamp flits, plus the block payload.
         st.flits += payload * (protocol.MESSAGE_FLITS["RENEW_REP"]
                                + protocol.data_flits(self.block_bytes))
+        if self.policy.predictor:
+            # a data-less renewal from a holder of a cached copy means that
+            # requester's lease aged out before the version changed: wasted
+            # traffic, grow the block's next lease.  Requesters only renew
+            # on local expiry, so no owner-side expiry gate -- with several
+            # readers the owner rts is often already extended past the
+            # requester's pts by a peer's renewal, yet the message was
+            # still sent
+            grow = renew_ok & had_copy
+            if np.any(grow):
+                b = idx[grow]
+                self._pred_lease[b] = np.minimum(
+                    self.policy.lease_max, self._pred_lease[b] * 2)
+                st.pred_grows += int(np.sum(grow))
         if self._san is not None:
             self._san.after(self, "read", pts=int(pts), new_pts=new_pts)
         return ReadResult(expired, renew_ok, wts_at, rts_at, new_pts)
@@ -738,7 +796,7 @@ class LeaseEngine:
         if self.backend == "pallas":
             out = lease_ops.masked_lease_check_many(
                 self._wts, self._rts, jnp.asarray(req), jnp.asarray(masks),
-                jnp.asarray(pts_rows), np.int32(self.lease),
+                jnp.asarray(pts_rows), self._lease_arg(),
                 interpret=self.interpret)
             self._rts = out["new_rts"]
             expired, renew_ok, wts_at, rts_at = (np.asarray(x) for x in
@@ -747,6 +805,7 @@ class LeaseEngine:
             new_pts = np.asarray(out["new_pts"])
         else:
             m = masks.astype(bool)
+            lv = self._lease_arg()
             rts0 = self._rts
             expired_f = m & (pts_rows[:, None] > rts0[None, :])
             renew_f = m & (req[None, :] == self._wts[None, :])
@@ -754,8 +813,8 @@ class LeaseEngine:
             new_pts = pts_rows.copy()
             for g in range(n_rows):
                 ext = np.maximum(
-                    np.maximum(rts0, self._wts + self.lease),
-                    np.int32(pts_rows[g] + self.lease))
+                    np.maximum(rts0, self._wts + lv),
+                    np.int32(pts_rows[g]) + lv)
                 new_rts = np.where(m[g], np.maximum(new_rts, ext), new_rts)
                 consumed = np.where(m[g] & (pts_rows[g] <= rts0),
                                     self._wts, 0)
@@ -787,6 +846,15 @@ class LeaseEngine:
         st.flits += data_less * protocol.MESSAGE_FLITS["RENEW_REP"]
         st.flits += payload * (protocol.MESSAGE_FLITS["RENEW_REP"]
                                + protocol.data_flits(self.block_bytes))
+        if self.policy.predictor:
+            # same rule as read(): every data-less renewal of a held copy
+            # is waste, however many groups named the block this wave
+            grow = renew_u & had_copy
+            if np.any(grow):
+                b = union_idx[grow]
+                self._pred_lease[b] = np.minimum(
+                    self.policy.lease_max, self._pred_lease[b] * 2)
+                st.pred_grows += int(np.sum(grow))
         if self._san is not None:
             self._san.after(self, "read_many", pts=pts_vec,
                             new_pts=new_pts)
@@ -835,6 +903,13 @@ class LeaseEngine:
         st.payload_bytes += n * self.block_bytes
         # publish: one header flit + payload per block (DRAM_ST_REQ shape).
         st.flits += n * (1 + protocol.data_flits(self.block_bytes))
+        if self.policy.predictor:
+            # a write had to clear the lease: shrink so the next lease
+            # blocks writers for less long (livelock-free -- the write
+            # already jumped ahead regardless of the prediction)
+            self._pred_lease[idx] = np.maximum(
+                self.policy.lease_min, self._pred_lease[idx] // 2)
+            st.pred_shrinks += n
         if self._san is not None:
             self._san.after(self, "write", idx=idx, pts=int(pts), ts=ts)
         return ts
@@ -916,5 +991,9 @@ class LeaseEngine:
             "wire_flits": st.flits,
             "wire_bytes": st.wire_bytes,
             "rebases": st.rebases,
+            "pred_grows": st.pred_grows,
+            "pred_shrinks": st.pred_shrinks,
+            "pred_lease_lo": int(self._pred_lease.min(initial=self.lease)),
+            "pred_lease_hi": int(self._pred_lease.max(initial=self.lease)),
             "sanitize_checks": self.sanitize_checks,
         }

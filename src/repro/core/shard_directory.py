@@ -52,6 +52,7 @@ import numpy as np
 
 from . import protocol, timestamps
 from .lease_engine import LeaseEngine
+from .policy import CoherencePolicy
 from ..dist import collectives
 
 
@@ -88,6 +89,7 @@ class FetchedPage:
     tag: int
     wver: int
     blocks: Mapping[str, np.ndarray]   # {pool: (1, *pool_shape)}
+    pred_lease: int = 0                # owner's predicted lease travels too
 
 
 @dataclasses.dataclass
@@ -152,6 +154,7 @@ class ShardedLeaseDirectory:
     """
 
     def __init__(self, n_blocks: int, n_shards: int, *,
+                 policy: Optional[CoherencePolicy] = None,
                  n_hosts: Optional[int] = None, lease: int = 64,
                  backend: str = "numpy", ts_bits: int = 30,
                  block_bytes: int = 0, interpret: Optional[bool] = None,
@@ -160,16 +163,21 @@ class ShardedLeaseDirectory:
                  transport: Optional[NumpyTransport] = None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if policy is None:
+            policy = CoherencePolicy(lease=int(lease), ts_bits=int(ts_bits))
+        self.policy = policy
         self.n_blocks = int(n_blocks)
         self.n_shards = int(n_shards)
         self.n_hosts = int(n_hosts) if n_hosts is not None else self.n_shards
-        self.lease = int(lease)
-        self.ts_bits = int(ts_bits)
+        self.lease = int(policy.lease)
+        self.ts_bits = int(policy.ts_bits)
         self.block_bytes = int(block_bytes)
         self.n_slots = -(-self.n_blocks // self.n_shards)
+        # each shard engine carries its slots' predictor state, so a
+        # prediction lives at (and travels with) the block's owner
         self.shards: List[LeaseEngine] = [
-            LeaseEngine(self.n_slots, lease, backend=backend,
-                        ts_bits=ts_bits, block_bytes=block_bytes,
+            LeaseEngine(self.n_slots, policy=policy, backend=backend,
+                        block_bytes=block_bytes,
                         interpret=interpret, kv_pools=kv_pools,
                         kv_dtype=kv_dtype, alloc_reserve=self.n_slots,
                         sanitize=sanitize)
@@ -228,6 +236,15 @@ class ShardedLeaseDirectory:
         for s, eng in enumerate(self.shards):
             gids = np.arange(s, self.n_blocks, self.n_shards)
             out[gids] = eng.rts[:gids.size]
+        return out
+
+    @property
+    def pred_lease(self) -> np.ndarray:
+        """Reassembled global predicted-lease view (owner-side state)."""
+        out = np.full(self.n_blocks, self.lease, np.int32)
+        for s, eng in enumerate(self.shards):
+            gids = np.arange(s, self.n_blocks, self.n_shards)
+            out[gids] = eng.pred_lease[:gids.size]
         return out
 
     def home_ok(self, gid: int) -> bool:
@@ -518,7 +535,8 @@ class ShardedLeaseDirectory:
                 fetched[b] = FetchedPage(
                     gid=b, wts=w, rts=r, tag=int(self.tags[b]),
                     wver=int(self.wver[b]),
-                    blocks={k: np.asarray(v) for k, v in blocks.items()})
+                    blocks={k: np.asarray(v) for k, v in blocks.items()},
+                    pred_lease=int(eng.pred_lease[sl]))
                 self.stats.migrations += 1
 
             # 5) charge the exchange (remote shards only)
@@ -527,9 +545,12 @@ class ShardedLeaseDirectory:
             n_read = sum(len(set(g)) for g in slot_groups if g) \
                 if have_reads else 0
             n_fetch = sum(1 for b in e["fetches"] if b in fetched)
+            # the predicted lease piggybacks on the existing reply (4 more
+            # bytes per read entry); the static path charges as before
+            read_entry = 12 if self.policy.predictor else 8
             req_flits = (1 + protocol.data_flits(4 * n_ids + 8)
                          + n_pend * protocol.data_flits(self.block_bytes))
-            rep_flits = (1 + protocol.data_flits(8 * n_read + 8)
+            rep_flits = (1 + protocol.data_flits(read_entry * n_read + 8)
                          + n_fetch
                          * (1 + protocol.data_flits(self.block_bytes)))
             self.stats.req_msgs += 1
@@ -612,6 +633,10 @@ class ShardedLeaseDirectory:
             "xhost_transport_routes": (self.transport.routes
                                        if self.transport else 0),
             "xhost_rebases": self.rebases,
+            "xhost_pred_grows": sum(e.stats.pred_grows
+                                    for e in self.shards),
+            "xhost_pred_shrinks": sum(e.stats.pred_shrinks
+                                      for e in self.shards),
             "xhost_sanitize_checks": self.sanitize_checks,
         }
 

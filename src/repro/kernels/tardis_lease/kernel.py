@@ -41,7 +41,10 @@ interleaved inside each token row) can stream or append a single stack's
 segment without touching its neighbors' bits.
 
 pts/lease (and ts for the advance pass) arrive via scalar prefetch so a
-serving engine can stream tables through the same compiled kernels.
+serving engine can stream tables through the same compiled kernels; a
+Tardis 2.0 predicted (per-block) lease instead rides as one more tensor
+input on the same BlockSpec as the tables -- static policies keep the
+scalar path and pay nothing for the feature.
 Unselected blocks pass through untouched, which is also how ragged tables
 are handled: the padding lanes simply carry mask == 0.
 """
@@ -55,10 +58,8 @@ from jax.experimental.pallas import tpu as pltpu
 LANES = 128
 
 
-def _lease_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, mask_ref,
-                  new_rts_ref, flags_ref, rowmax_rts_ref, rowmax_wts_ref):
-    pts = scalars_ref[0]
-    lease = scalars_ref[1]
+def _lease_step(pts, lease, wts_ref, rts_ref, reqwts_ref, mask_ref,
+                new_rts_ref, flags_ref, rowmax_rts_ref, rowmax_wts_ref):
     wts = wts_ref[...]
     rts = rts_ref[...]
     req = reqwts_ref[...]
@@ -80,10 +81,25 @@ def _lease_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, mask_ref,
     rowmax_wts_ref[...] = jnp.max(consumed, axis=1, keepdims=True)
 
 
-def _lease_many_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, masks_ref,
-                       new_rts_ref, flags_ref, rowmax_rts_ref,
+def _lease_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, mask_ref,
+                  new_rts_ref, flags_ref, rowmax_rts_ref, rowmax_wts_ref):
+    # static policy: one lease value rides the scalar prefetch
+    _lease_step(scalars_ref[0], scalars_ref[1], wts_ref, rts_ref, reqwts_ref,
+                mask_ref, new_rts_ref, flags_ref, rowmax_rts_ref,
+                rowmax_wts_ref)
+
+
+def _lease_pred_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, mask_ref,
+                       lease_ref, new_rts_ref, flags_ref, rowmax_rts_ref,
                        rowmax_wts_ref):
-    lease = scalars_ref[0]
+    # Tardis 2.0 predictor: per-block leases stream as a table input
+    _lease_step(scalars_ref[0], lease_ref[...], wts_ref, rts_ref, reqwts_ref,
+                mask_ref, new_rts_ref, flags_ref, rowmax_rts_ref,
+                rowmax_wts_ref)
+
+
+def _lease_many_step(lease, pts_at, wts_ref, rts_ref, reqwts_ref, masks_ref,
+                     new_rts_ref, flags_ref, rowmax_rts_ref, rowmax_wts_ref):
     wts = wts_ref[...]
     rts = rts_ref[...]
     req = reqwts_ref[...]
@@ -92,7 +108,7 @@ def _lease_many_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, masks_ref,
     union = jnp.zeros_like(wts)
     new_rts = rts
     for g in range(n_groups):           # static: unrolled over the wave
-        pts = scalars_ref[1 + g]
+        pts = pts_at(g)
         mask = masks_ref[g] != 0
         expired = mask & (pts > rts)
         renew_ok = mask & (req == wts)
@@ -105,6 +121,32 @@ def _lease_many_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, masks_ref,
         rowmax_wts_ref[g, ...] = jnp.max(consumed, axis=1, keepdims=True)
     new_rts_ref[...] = new_rts
     rowmax_rts_ref[...] = jnp.max(jnp.where(union != 0, rts, -1), axis=1,
+                                  keepdims=True)
+
+
+def _lease_many_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref, masks_ref,
+                       new_rts_ref, flags_ref, rowmax_rts_ref,
+                       rowmax_wts_ref):
+    # static policy: scalars are [lease, pts_0 .. pts_{G-1}]
+    _lease_many_step(scalars_ref[0], lambda g: scalars_ref[1 + g], wts_ref,
+                     rts_ref, reqwts_ref, masks_ref, new_rts_ref, flags_ref,
+                     rowmax_rts_ref, rowmax_wts_ref)
+
+
+def _lease_many_pred_kernel(scalars_ref, wts_ref, rts_ref, reqwts_ref,
+                            masks_ref, lease_ref, new_rts_ref, flags_ref,
+                            rowmax_rts_ref, rowmax_wts_ref):
+    # Tardis 2.0 predictor: scalars are pts_0 .. pts_{G-1}, lease is a table
+    _lease_many_step(lease_ref[...], lambda g: scalars_ref[g], wts_ref,
+                     rts_ref, reqwts_ref, masks_ref, new_rts_ref, flags_ref,
+                     rowmax_rts_ref, rowmax_wts_ref)
+
+
+def _rowmax_kernel(scalars_ref, rts_ref, mask_ref, rowmax_rts_ref):
+    del scalars_ref                     # shared plumbing; no scalars needed
+    rts = rts_ref[...]
+    mask = mask_ref[...] != 0
+    rowmax_rts_ref[...] = jnp.max(jnp.where(mask, rts, -1), axis=1,
                                   keepdims=True)
 
 
@@ -142,17 +184,40 @@ def _grid_call(kernel, inputs, out_lanes, block_rows, interpret, scalars):
 
 def lease_table(wts, rts, req_wts, mask, pts, lease, *, block_rows: int = 8,
                 interpret: bool = False):
-    """wts/rts/req_wts/mask: (R, 128) int32; pts, lease: scalars.
+    """wts/rts/req_wts/mask: (R, 128) int32; pts: scalar.
 
-    Returns (new_rts (R,128), flags (R,128), rowmax_rts (R,1),
-    rowmax_wts (R,1)); flags bit0 = renew_ok, bit1 = expired, both zero
-    outside the mask.
+    ``lease`` is a scalar (static policy -- rides the scalar prefetch, no
+    extra table stream) or a per-block (R, 128) tensor (the Tardis 2.0
+    predicted-lease path).  Returns (new_rts (R,128), flags (R,128),
+    rowmax_rts (R,1), rowmax_wts (R,1)); flags bit0 = renew_ok, bit1 =
+    expired, both zero outside the mask.
     """
     assert wts.shape[1] == LANES, wts.shape
-    scalars = jnp.stack([jnp.asarray(pts, jnp.int32),
-                         jnp.asarray(lease, jnp.int32)])
-    return _grid_call(_lease_kernel, (wts, rts, req_wts, mask),
+    lease = jnp.asarray(lease, jnp.int32)
+    if lease.ndim == 0:
+        scalars = jnp.stack([jnp.asarray(pts, jnp.int32), lease])
+        return _grid_call(_lease_kernel, (wts, rts, req_wts, mask),
+                          (LANES, LANES, 1, 1), block_rows, interpret,
+                          scalars)
+    assert lease.shape == wts.shape, (lease.shape, wts.shape)
+    scalars = jnp.stack([jnp.asarray(pts, jnp.int32)])
+    return _grid_call(_lease_pred_kernel, (wts, rts, req_wts, mask, lease),
                       (LANES, LANES, 1, 1), block_rows, interpret, scalars)
+
+
+def rowmax_table(rts, mask, *, block_rows: int = 8,
+                 interpret: bool = False):
+    """max(masked rts) per row -- the writer jump-ahead operand.
+
+    The write path needs only this reduction from the lease pass, so it
+    gets a dedicated 2-input/1-output kernel instead of streaming the
+    full 5-input lease kernel (whose per-block lease tensor the jump-ahead
+    never reads)."""
+    assert rts.shape[1] == LANES, rts.shape
+    scalars = jnp.zeros((1,), jnp.int32)
+    (out,) = _grid_call(_rowmax_kernel, (rts, mask), (1,),
+                        block_rows, interpret, scalars)
+    return out
 
 
 def advance_table(wts, rts, mask, ts, *, block_rows: int = 8,
@@ -169,7 +234,9 @@ def lease_table_many(wts, rts, req_wts, masks, pts_vec, lease, *,
     """Multi-row mask path: one pass over G per-group masks.
 
     wts/rts/req_wts: (R, 128) int32; masks: (G, R, 128) int32;
-    pts_vec: (G,) int32 per-group program timestamps; lease: scalar.
+    pts_vec: (G,) int32 per-group program timestamps; lease: scalar
+    (static policy -- rides the scalar prefetch) or (R, 128) int32
+    per-block leases (the Tardis 2.0 predicted-lease path).
 
     Returns (new_rts (R,128) -- union extension, flags (G,R,128) -- bit0
     renew_ok / bit1 expired per group vs the pre-call table, rowmax_rts
@@ -179,19 +246,29 @@ def lease_table_many(wts, rts, req_wts, masks, pts_vec, lease, *,
     assert wts.shape[1] == LANES, wts.shape
     g, r = masks.shape[0], wts.shape[0]
     assert masks.shape == (g, r, LANES), masks.shape
-    scalars = jnp.concatenate([jnp.asarray([lease], jnp.int32),
-                               jnp.asarray(pts_vec, jnp.int32)])
+    lease = jnp.asarray(lease, jnp.int32)
+    if lease.ndim == 0:
+        kernel = _lease_many_kernel
+        scalars = jnp.concatenate([lease[None],
+                                   jnp.asarray(pts_vec, jnp.int32)])
+        tables = (wts, rts, req_wts, masks)
+    else:
+        assert lease.shape == wts.shape, (lease.shape, wts.shape)
+        kernel = _lease_many_pred_kernel
+        scalars = jnp.asarray(pts_vec, jnp.int32)
+        tables = (wts, rts, req_wts, masks, lease)
     block_rows = min(block_rows, r)
     assert r % block_rows == 0
     grid = (r // block_rows,)
     spec2 = pl.BlockSpec((block_rows, LANES), lambda i, _s: (i, 0))
     spec3 = pl.BlockSpec((g, block_rows, LANES), lambda i, _s: (0, i, 0))
+    in_specs = [spec2, spec2, spec2, spec3] + [spec2] * (len(tables) - 4)
     return pl.pallas_call(
-        _lease_many_kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[spec2, spec2, spec2, spec3],
+            in_specs=in_specs,
             out_specs=[
                 spec2,                                        # new_rts
                 spec3,                                        # flags
@@ -205,7 +282,7 @@ def lease_table_many(wts, rts, req_wts, masks, pts_vec, lease, *,
             jax.ShapeDtypeStruct((g, r, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(scalars, wts, rts, req_wts, masks)
+    )(scalars, *tables)
 
 
 def _gather_kernel(idx_ref, pool_ref, out_ref):

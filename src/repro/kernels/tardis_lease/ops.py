@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (LANES, advance_table, gather_rows, lease_table,
-                     lease_table_many, scatter_rows)
+                     lease_table_many, rowmax_table, scatter_rows)
 
 
 def _pad2d(x, pad, fill=0):
@@ -34,11 +34,13 @@ def masked_lease_check(wts, rts, req_wts, mask, pts, lease,
                        interpret: bool = False):
     """Lease-check / renew / extend the blocks selected by ``mask``.
 
-    wts/rts/req_wts/mask: flat (N,) int32 tables.  Returns dict with
-    per-block ``new_rts`` (extended only where masked), ``renew_ok`` /
-    ``expired`` flags (False outside the mask), the writer's jump-ahead
-    operand ``write_ts`` = max(masked rts) + 1, and the reader's program
-    timestamp after consuming every masked readable block, ``new_pts``.
+    wts/rts/req_wts/mask: flat (N,) int32 tables; ``lease`` is a scalar or
+    a per-block (N,) vector (the Tardis 2.0 predicted-lease path).  Returns
+    dict with per-block ``new_rts`` (extended only where masked),
+    ``renew_ok`` / ``expired`` flags (False outside the mask), the writer's
+    jump-ahead operand ``write_ts`` = max(masked rts) + 1, and the reader's
+    program timestamp after consuming every masked readable block,
+    ``new_pts``.
     """
     n = wts.shape[0]
     pad = (-n) % LANES
@@ -46,8 +48,11 @@ def masked_lease_check(wts, rts, req_wts, mask, pts, lease,
     rts2 = _pad2d(rts, pad)
     req2 = _pad2d(req_wts, pad)
     mask2 = _pad2d(mask, pad)          # padding lanes carry mask == 0
+    lease2 = jnp.asarray(lease, jnp.int32)
+    if lease2.ndim:                    # per-block predicted leases
+        lease2 = _pad2d(lease2, pad)
     new_rts, flags, rowmax_rts, rowmax_wts = lease_table(
-        wts2, rts2, req2, mask2, pts, lease,
+        wts2, rts2, req2, mask2, pts, lease2,
         block_rows=_block_rows(wts2.shape[0]), interpret=interpret)
     return {
         "new_rts": new_rts.reshape(-1)[:n],
@@ -65,7 +70,8 @@ def masked_lease_check_many(wts, rts, req_wts, masks, pts_vec, lease,
     """Per-wave batched lease check: G mask rows resolved in one pass.
 
     wts/rts/req_wts: flat (N,) int32 tables; masks: (G, N) int32 -- one row
-    per requester of the wave; pts_vec: (G,) int32 program timestamps.
+    per requester of the wave; pts_vec: (G,) int32 program timestamps;
+    ``lease``: scalar or per-block (N,) vector.
     Returns per-block ``new_rts`` (the union of the per-group Table III
     extensions), per-group ``renew_ok`` / ``expired`` flags (G, N) evaluated
     against the pre-call table (the wave's shared snapshot), the writer's
@@ -79,8 +85,11 @@ def masked_lease_check_many(wts, rts, req_wts, masks, pts_vec, lease,
     rts2 = _pad2d(rts, pad)
     req2 = _pad2d(req_wts, pad)
     masks2 = jnp.pad(masks, ((0, 0), (0, pad))).reshape(g, -1, LANES)
+    lease2 = jnp.asarray(lease, jnp.int32)
+    if lease2.ndim:                    # per-block predicted leases
+        lease2 = _pad2d(lease2, pad)
     new_rts, flags, rowmax_rts, rowmax_wts = lease_table_many(
-        wts2, rts2, req2, masks2, pts_vec, lease,
+        wts2, rts2, req2, masks2, pts_vec, lease2,
         block_rows=_block_rows(wts2.shape[0]), interpret=interpret)
     flags_flat = flags.reshape(g, -1)[:, :n]
     return {
@@ -97,7 +106,7 @@ def masked_lease_check_many(wts, rts, req_wts, masks, pts_vec, lease,
 def write_advance(wts, rts, mask, pts, interpret: bool = False):
     """Writer jump-ahead over the blocks selected by ``mask``.
 
-    Two kernel passes: the lease kernel reduces max(masked rts) per row,
+    Two kernel passes: the rowmax kernel reduces max(masked rts) per row,
     then the advance kernel sets ``wts = rts = ts`` on every masked block
     with ``ts = max(pts, max(masked rts) + 1)`` (Table I store rule).
     Returns (new_wts, new_rts, ts), all int32.
@@ -108,8 +117,8 @@ def write_advance(wts, rts, mask, pts, interpret: bool = False):
     rts2 = _pad2d(rts, pad)
     mask2 = _pad2d(mask, pad)
     rows = _block_rows(wts2.shape[0])
-    _, _, rowmax_rts, _ = lease_table(
-        wts2, rts2, wts2, mask2, 0, 0, block_rows=rows, interpret=interpret)
+    rowmax_rts = rowmax_table(rts2, mask2, block_rows=rows,
+                              interpret=interpret)
     ts = jnp.maximum(jnp.asarray(pts, jnp.int32), jnp.max(rowmax_rts) + 1)
     new_wts, new_rts = advance_table(wts2, rts2, mask2, ts, block_rows=rows,
                                      interpret=interpret)

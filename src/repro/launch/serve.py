@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCHS, get_arch, reduced
+from ..core import CONSISTENCY_MODELS, CoherencePolicy
 from ..models import init_params
 from ..runtime import MultiHostServingCluster, Request, ServingCluster
 
@@ -47,7 +48,26 @@ def main():
                          "mixed), e.g. 'prefill,decode,decode'; implies "
                          "--hosts len(roles) and routes cold prefixes "
                          "through the prefill pods")
+    ap.add_argument("--consistency", choices=CONSISTENCY_MODELS,
+                    default="sc",
+                    help="memory model for prefix-KV leases: tso/rc lets "
+                         "decode serve tag-checked read-only blocks past "
+                         "the lease end without a renewal message")
+    ap.add_argument("--kv-lease", type=int, default=16,
+                    help="base prefix-KV lease (logical ticks)")
+    ap.add_argument("--lease-bounds", default="",
+                    help="'min:max' bounds for the per-block lease "
+                         "predictor; turns adaptive (Tardis 2.0) lease "
+                         "prediction on")
     args = ap.parse_args()
+    if args.lease_bounds:
+        lo, _, hi = args.lease_bounds.partition(":")
+        policy = CoherencePolicy(
+            consistency=args.consistency, lease=args.kv_lease,
+            lease_min=int(lo), lease_max=int(hi), predictor=True)
+    else:
+        policy = CoherencePolicy(consistency=args.consistency,
+                                 lease=args.kv_lease)
     roles = [r.strip() for r in args.roles.split(",") if r.strip()]
     if roles:
         if args.hosts > 1 and args.hosts != len(roles):
@@ -62,7 +82,7 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     kw = dict(n_replicas=args.replicas, lease=args.lease,
               prefix_block_tokens=args.prefix_block,
-              kv_lease=16, cache_len=96,
+              policy=policy, cache_len=96,
               n_decode_pages=args.decode_pages,
               max_pages=args.max_pages,
               selfinc_period=4, max_batch=args.max_batch)

@@ -68,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.lease_engine import LeaseEngine
+from ..core.policy import CoherencePolicy, resolve_policy
 from ..core.shard_directory import ShardedLeaseDirectory
 from ..core.store import Replica, TardisStore
 from ..models import (PAGED_FAMILIES, decode_step, decode_step_paged,
@@ -215,18 +216,72 @@ def _prefix_cache(stacks, pkv, batch, cache_len: int, skip: int):
     return cache
 
 
+class CoherenceReport(dict):
+    """The coherence ledger: the legacy flat counter dict plus typed group
+    accessors, so callers address a whole namespace (``report.xhost``,
+    ``report.role``, ``report.router``, ``report.lease``) instead of
+    string-matching individual key names.  Every flat key is preserved --
+    the accessors are read-only views over the same entries.
+    """
+
+    # the lease-protocol namespace has historical un-prefixed names; the
+    # accessor gathers them so new call sites never hard-code the list
+    _LEASE_KEYS = (
+        "kv_lease", "consistency", "renewals", "data_less_renewals",
+        "prefix_renewals", "prefix_local_hits",
+        "prefix_data_less_renewals", "decode_renewals",
+        "decode_renewals_skipped", "decode_local_hits", "pred_grows",
+        "pred_shrinks", "pred_lease_lo", "pred_lease_hi")
+
+    def _ns(self, prefix: str) -> Dict[str, Any]:
+        return {k[len(prefix):]: self[k]
+                for k in self if k.startswith(prefix)}
+
+    @property
+    def lease(self) -> Dict[str, Any]:
+        """Lease-protocol group: renewals, local hits, predictor state."""
+        return {k: self[k] for k in self._LEASE_KEYS if k in self}
+
+    @property
+    def xhost(self) -> Dict[str, Any]:
+        """Cross-host group: the ``xhost_*`` directory/migration ledger."""
+        return self._ns("xhost_")
+
+    @property
+    def role(self) -> Dict[str, Any]:
+        """Per-role group: the ``role_*`` disaggregation ledger."""
+        return self._ns("role_")
+
+    @property
+    def router(self) -> Dict[str, Any]:
+        """Admission-router group: the ``router_*`` ledger."""
+        return self._ns("router_")
+
+
 class ServingCluster:
     """N replicas + weight publisher + shared paged-KV LeaseEngine pool."""
 
     def __init__(self, cfg, init_params_fn: Callable[[], Any],
                  n_replicas: int = 2, lease: int = 10,
                  n_prefix_blocks: int = 4096, prefix_block_tokens: int = 16,
-                 kv_lease: int = 64, prefix_reuse: bool = True,
-                 ts_bits: int = 30, prefix_backend: str = "pallas",
+                 kv_lease: Optional[int] = None, prefix_reuse: bool = True,
+                 ts_bits: Optional[int] = None,
+                 prefix_backend: str = "pallas",
                  n_decode_pages: int = 512, max_pages: int = 32,
                  sanitize: Optional[bool] = None,
+                 policy: Optional[CoherencePolicy] = None,
                  **replica_kw):
         self.cfg = cfg
+        if kv_lease is not None or ts_bits is not None:
+            if policy is not None:
+                raise ValueError(
+                    "pass either policy= or the legacy kv_lease=/ts_bits= "
+                    "kwargs, not both")
+            warnings.warn(
+                "kv_lease=/ts_bits= are deprecated; pass policy="
+                "CoherencePolicy(lease=..., ts_bits=...) instead",
+                DeprecationWarning, stacklevel=2)
+        self.policy = resolve_policy(policy, lease=kv_lease, ts_bits=ts_bits)
         self.store = TardisStore(lease=lease)
         p0 = init_params_fn()
         nbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(p0))
@@ -265,8 +320,8 @@ class ServingCluster:
         n_blocks = self.n_prefix_blocks + (self.n_decode_pages
                                            if kv_pools else 0)
         self.prefix_engine = LeaseEngine(
-            n_blocks, lease=kv_lease, block_bytes=kv_bytes,
-            ts_bits=ts_bits, backend=prefix_backend,
+            n_blocks, policy=self.policy, block_bytes=kv_bytes,
+            backend=prefix_backend,
             kv_pools=kv_pools, alloc_reserve=self.n_prefix_blocks,
             sanitize=sanitize)
         if kv_pools:
@@ -296,7 +351,7 @@ class ServingCluster:
             "prefix_tokens_reused": 0,
             "prefix_prefill_tokens_skipped": 0, "prefix_flops_saved": 0,
             "decode_renewals": 0, "decode_local_hits": 0,
-            "decode_block_reads": 0,
+            "decode_renewals_skipped": 0, "decode_block_reads": 0,
             "pinned_relocations": 0, "paged_mid_batch_admissions": 0,
             "paged_admission_deferrals": 0, "pool_page_peak": 0,
             "xhost_pages_fetched": 0, "xhost_pages_published": 0,
@@ -662,6 +717,9 @@ class ServingCluster:
             self._tags[bid] = page.tag
             self._pool_wver[bid] = -1 if wver is None else int(wver)
             rep.kv_leases[bid] = (page.wts, page.rts, page.tag)
+            if self.policy.predictor:
+                # Tardis 2.0: the owner's learned lease travels with the page
+                eng.set_pred_lease([bid], page.pred_lease)
             self._migrated.add(bid)
             self.prefix_stats["xhost_pages_fetched"] += 1
             if dirx._msan is not None:
@@ -1009,6 +1067,12 @@ class ServingCluster:
                     self.prefix_stats["prefix_local_hits"] += 1
                     self.prefix_stats["decode_local_hits"] += 1
                     rep.kv_pts = max(rep.kv_pts, ent[0])   # Table I load
+                elif self.policy.skip_expired_renewal():
+                    # TSO/RC: the store->load relaxation orders this read
+                    # before the pts advance that aged the lease out, so a
+                    # tag-checked read-only block serves locally with no
+                    # renewal message (and no pts move off the stale wts)
+                    self.prefix_stats["decode_renewals_skipped"] += 1
                 elif bid not in expired:
                     expired[bid] = ent[0]
         if not expired:
@@ -1044,6 +1108,10 @@ class ServingCluster:
                     ps["prefix_local_hits"] += 1
                     ps["decode_local_hits"] += 1
                     rep.kv_pts = max(rep.kv_pts, ent[0])   # Table I load
+                elif self.policy.skip_expired_renewal():
+                    # TSO/RC: serve the tag-checked copy past its lease end
+                    # with no renewal wave (see _renew_decode_leases)
+                    ps["decode_renewals_skipped"] += 1
                 elif bid not in expired:
                     expired[bid] = ent[0]
         if not expired:
@@ -1170,7 +1238,7 @@ class ServingCluster:
         # local hits never generate a message at all -- ledger them apart
         local_saved = (self.prefix_stats["prefix_local_hits"]
                        * self.prefix_engine.block_bytes)
-        return {
+        return CoherenceReport({
             "reads": s.reads, "writes": s.writes,
             "renewals": s.renews + e.renewals,
             "data_less_renewals": s.renew_data_less + e.data_less,
@@ -1197,6 +1265,9 @@ class ServingCluster:
             "prefix_kv_blocks_written": e.kv_blocks_written,
             "prefix_kv_blocks_read": e.kv_blocks_read,
             "prefix_kv_evictions": e.kv_evictions,
+            # Tardis 2.0 lease-predictor ledger
+            "pred_grows": e.pred_grows,
+            "pred_shrinks": e.pred_shrinks,
             # decode-through-pages ledger (pool occupancy / page churn)
             "kv_tokens_appended": e.kv_tokens_appended,
             "pool_pages_allocated": e.pages_allocated,
@@ -1212,9 +1283,10 @@ class ServingCluster:
             # multi-host aggregate reports them once instead of summing)
             "ts_bits": self.prefix_engine.ts_bits,
             "kv_lease": self.prefix_engine.lease,
+            "consistency": self.policy.consistency,
             "n_prefix_blocks": self.n_prefix_blocks,
             "role": self.role,
-        }
+        })
 
 
 class MultiHostServingCluster:
@@ -1295,7 +1367,7 @@ class MultiHostServingCluster:
         eng = h0.prefix_engine
         self.directory = ShardedLeaseDirectory(
             h0.n_prefix_blocks, int(n_shards or n_hosts), n_hosts=n_hosts,
-            lease=eng.lease, backend=dir_backend, ts_bits=eng.ts_bits,
+            policy=h0.policy, backend=dir_backend,
             block_bytes=eng.block_bytes, kv_pools=eng.kv_pools,
             kv_dtype=np.asarray(eng._kv_pool[:0]).dtype, sanitize=sanitize)
         for h, host in enumerate(self.hosts):
@@ -1489,8 +1561,8 @@ class MultiHostServingCluster:
     # config-like report keys: identical on every host by construction,
     # so the aggregate reports them ONCE (and asserts the fleet agrees)
     # instead of summing them like traffic counters.
-    _CONFIG_KEYS = ("ts_bits", "kv_lease", "n_prefix_blocks",
-                    "kv_pool_stacks")
+    _CONFIG_KEYS = ("ts_bits", "kv_lease", "consistency",
+                    "n_prefix_blocks", "kv_pool_stacks")
     # high-water marks: the fleet-wide value is the max, not the sum.
     _MAX_KEYS = ("pool_page_peak", "directory_peak_sharers")
     # per-host breakout columns (the smokes grep host{h}_* rows).
@@ -1534,4 +1606,4 @@ class MultiHostServingCluster:
         agg["n_hosts"] = len(self.hosts)
         agg.update(self._route_stats)
         agg.update(self.directory.report())
-        return agg
+        return CoherenceReport(agg)

@@ -39,6 +39,18 @@ Plus the per-wave batching contracts: randomized differential tests that
 ``read_many`` / ``write_many`` are bit-identical in ``wts/rts/pts`` to the
 per-request path issued at the wave's shared pts, and that the multi-row
 mask kernel matches its scalar-composed oracle for per-group timestamps.
+
+**Relaxed-consistency outcome tables (Tardis 2.0).**  A weaker memory
+model is exactly a set of legal program-order transformations -- TSO may
+order a load before a program-earlier store to a different address, RC may
+reorder any two adjacent accesses to different addresses -- so each
+model's outcome set is enumerated by running every reachable per-core
+reordering through the SAME SC interleaving machinery on every backend
+(the backends never change; consistency is a property of what the core is
+allowed to issue).  The table: SB's relaxed outcome is forbidden under SC
+but allowed-and-observed under TSO and RC; MP/LB/IRIW stay forbidden
+under TSO and become observable only under RC; CoRR (same address, so no
+model reorders it) is forbidden everywhere.
 """
 import itertools
 
@@ -348,6 +360,94 @@ def test_litmus_forbidden_outcomes_never_observed(shape, lease,
             for addr2, ts in stores:
                 assert not (addr2 == addr and v < ts <= t), \
                     (shape, schedule, loads, stores)
+
+
+# ---------------------------------------------------------------------------
+# Relaxed-consistency outcome tables: SC/TSO/RC as program-order relaxations
+# ---------------------------------------------------------------------------
+
+def _swappable(a, b, model):
+    """May op ``b`` be issued before the program-earlier adjacent op ``a``
+    under ``model``?  Same-address pairs keep program order in every model
+    (per-location coherence is never relaxed)."""
+    if model == "sc" or a[1] == b[1]:
+        return False
+    if model == "tso":
+        return a[0] == "st" and b[0] == "ld"   # the store->load relaxation
+    return True                                # rc: any different-address pair
+
+
+def relaxed_programs(prog, model):
+    """All per-core issue orders reachable by the model's legal adjacent
+    swaps (the closure, not just one swap: TSO may sink a store below any
+    number of later different-address loads)."""
+    seen = {tuple(prog)}
+    frontier = [tuple(prog)]
+    while frontier:
+        cur = frontier.pop()
+        for i in range(len(cur) - 1):
+            if _swappable(cur[i], cur[i + 1], model):
+                nxt = cur[:i] + (cur[i + 1], cur[i]) + cur[i + 2:]
+                if nxt not in seen:
+                    seen.add(nxt)
+                    frontier.append(nxt)
+    return sorted(seen)
+
+
+def relaxed_variants(progs, model):
+    """Every combination of per-core reorderings the model allows."""
+    yield from itertools.product(*(relaxed_programs(p, model)
+                                   for p in progs))
+
+
+# shape -> model -> is the litmus shape's relaxed outcome allowed?  When
+# allowed it must also be OBSERVED (the lane is not vacuous); when
+# forbidden it must never appear across all variants x interleavings.
+RELAXED_OUTCOMES = {
+    "SB":   {"sc": False, "tso": True,  "rc": True},
+    "MP":   {"sc": False, "tso": False, "rc": True},
+    "LB":   {"sc": False, "tso": False, "rc": True},
+    "IRIW": {"sc": False, "tso": False, "rc": True},
+    "CoRR": {"sc": False, "tso": False, "rc": False},
+}
+
+
+@pytest.mark.parametrize("model", ["sc", "tso", "rc"])
+@pytest.mark.parametrize("shape", sorted(LITMUS))
+def test_relaxed_consistency_outcome_tables(shape, model):
+    """The per-model outcome tables, enumerated as program-order
+    relaxations over the unchanged SC machinery, agree on all FOUR
+    backend lanes (kernel, numpy mirror, scalar rules, sharded
+    directory): a forbidden outcome never appears in any variant, an
+    allowed one is actually witnessed."""
+    progs, forbidden = LITMUS[shape]
+    allowed = RELAXED_OUTCOMES[shape][model]
+    lease, n_cores = 4, len(progs)
+    backends = {
+        "kernel": lambda: EngineManager("pallas", lease),
+        "mirror": lambda: EngineManager("numpy", lease),
+        "scalar": lambda: ScalarManager(lease),
+        "sharded": lambda: ShardedManager(lease, n_cores),
+    }
+    observed = False
+    for variant in relaxed_variants(progs, model):
+        variant = [list(p) for p in variant]
+        for schedule in interleavings(variant):
+            results = {name: run_litmus(variant, schedule, mk)
+                       for name, mk in backends.items()}
+            regs = results["kernel"][0]
+            for name in ("mirror", "scalar", "sharded"):
+                assert results[name] == results["kernel"], \
+                    (shape, model, variant, schedule, name)
+            if forbidden(regs):
+                assert allowed, (shape, model, variant, schedule, regs)
+                observed = True
+                break                  # witnessed; no need to keep scanning
+        if observed:
+            break
+    assert observed == allowed, \
+        f"{shape} under {model}: relaxed outcome " \
+        f"{'never witnessed' if allowed else 'observed'}"
 
 
 # ---------------------------------------------------------------------------

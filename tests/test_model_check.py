@@ -8,9 +8,10 @@ Three layers of evidence that the checker actually checks:
     bit-for-bit against ``core.protocol`` and the LeaseEngine numpy
     mirror,
   * seeded guard mutations -- dropping the renewable wts check, dropping
-    the store jump-ahead, letting a lease extension land below wts -- are
-    each detected with a named invariant and a witness trace (the checker
-    is sensitive, not vacuously green),
+    the store jump-ahead, letting a lease extension land below wts, an
+    over-predicting Tardis 2.0 lease with no cap -- are each detected with
+    a named invariant and a witness trace (the checker is sensitive, not
+    vacuously green),
   * the runtime sanitizer trips on the same bug classes when they are
     injected into a live engine driving a litmus-shaped history.
 """
@@ -115,10 +116,21 @@ class LeaseBelowWts(Rules):
         return req_pts + lease
 
 
+class OverPredictLease(Rules):
+    """A Tardis 2.0 lease predictor with no cap: every extension grants 8x
+    the configured lease past the progress frontier, breaking the
+    lease-horizon invariant on its very first grant."""
+
+    @staticmethod
+    def lease_extend(llc_wts, llc_rts, req_pts, lease):
+        return max(llc_rts, llc_wts, req_pts) + 8 * lease
+
+
 @pytest.mark.parametrize("rules,needle", [
     (DropRenewableCheck, "stale"),
     (StoreNoJumpAhead, "jump"),
     (LeaseBelowWts, "rts"),
+    (OverPredictLease, "over-predicted"),
 ])
 def test_seeded_mutation_is_detected_with_witness(rules, needle):
     res = explore(TardisModel(CFG, rules=rules()), max_violations=4)
@@ -157,6 +169,16 @@ class _BackwardsWtsEngine(LeaseEngine):
         return ts
 
 
+class _OverPredictLeaseEngine(LeaseEngine):
+    """OverPredictLease injected live: each read's extension is inflated
+    far past the ``lease_max`` cap after the healthy grant."""
+
+    def read(self, idx, pts, req_wts=None):
+        r = super().read(idx, pts, req_wts=req_wts)
+        self._rts[np.asarray(idx, np.int64)] += 64 * self.lease
+        return r
+
+
 @pytest.mark.parametrize("bad_engine", [_RtsBelowWtsEngine,
                                         _BackwardsWtsEngine])
 def test_sanitizer_trips_on_injected_bug_during_litmus_history(bad_engine):
@@ -170,6 +192,15 @@ def test_sanitizer_trips_on_injected_bug_during_litmus_history(bad_engine):
         pts[0] = r.new_pts
         r = eng.read([0], pts[1], req_wts=[-1])  # c1: ld X
         pts[1] = r.new_pts
+
+
+def test_sanitizer_trips_on_over_predicted_lease():
+    eng = _OverPredictLeaseEngine(2, lease=4, backend="numpy",
+                                  sanitize=True)
+    pts = eng.write([0], 0)
+    r = eng.read([0], pts, req_wts=[-1])
+    with pytest.raises(SanitizeError, match="over-predicted lease"):
+        eng.read([0], int(r.new_pts), req_wts=[-1])
 
 
 def test_sanitizer_clean_on_healthy_engine_and_zero_cost_off():
